@@ -1,0 +1,58 @@
+"""Shared benchmark fixtures: scaled-down analogs of the paper's graphs.
+
+arxiv-like:    sparse (avg in-degree ~7)   — paper's Arxiv (169K/1.2M)
+products-like: dense  (avg in-degree ~50)  — paper's Products (2.5M/123M)
+reddit-like:   power-law heavy tail        — paper's Reddit (233K/115M)
+
+Scaled to CPU-benchmark sizes; the *ratios* (affected %, RP vs RC speedup,
+comm reduction) are the reproduction targets, not absolute up/s.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.core import (DynamicGraph, InferenceState, RecomputeEngine,
+                        RippleEngine, erdos_renyi, make_workload,
+                        params_to_numpy, powerlaw_graph)
+from repro.data.streams import make_stream, snapshot_split
+
+GRAPHS = {
+    "arxiv-like": dict(gen=erdos_renyi, n=4000, m=28000),
+    "products-like": dict(gen=erdos_renyi, n=4000, m=200000),
+    "reddit-like": dict(gen=powerlaw_graph, n=3000, m=150000),
+}
+
+
+def setup(graph: str, workload: str, n_layers: int = 2, d_in: int = 64,
+          d_hidden: int = 64, classes: int = 16, seed: int = 0):
+    spec = GRAPHS[graph]
+    wl = make_workload(workload, n_layers=n_layers, d_in=d_in,
+                       d_hidden=d_hidden, n_classes=classes)
+    src, dst, w = spec["gen"](spec["n"], spec["m"], seed=seed,
+                              weighted=wl.spec.weighted)
+    snap, holdout = snapshot_split(src, dst, w, 0.1, seed=seed)
+    g = DynamicGraph(spec["n"], *snap)
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(spec["n"], d_in)).astype(np.float32)
+    params = wl.init_params(jax.random.PRNGKey(seed))
+    return wl, g, x, params, holdout
+
+
+def engine_for(kind: str, wl, params, g, state):
+    cls = {"ripple": RippleEngine, "rc": RecomputeEngine}[kind]
+    return cls(wl, params_to_numpy(params), g, state)
+
+
+def run_stream(engine, g, holdout, n_updates: int, batch_size: int,
+               d_in: int, seed: int = 1):
+    """Returns (throughput up/s, median latency s, stats list)."""
+    stream = make_stream(g, holdout, n_updates, d_in, seed=seed)
+    stats, t0 = [], time.perf_counter()
+    for batch in stream.batches(batch_size):
+        stats.append(engine.apply_batch(batch))
+    wall = time.perf_counter() - t0
+    lat = np.median([s.wall_seconds for s in stats])
+    return len(stream) / wall, lat, stats

@@ -1,0 +1,67 @@
+"""Distributed RP-vs-RC benchmark (paper Figs 12/13) on 8 virtual devices.
+
+Measures per-batch wall time and exchanged message slots (the engines count
+them in-jit) for RIPPLE vs pull-based RC across partition counts — the
+paper's throughput and comm-cost scaling study, scaled to CPU.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time  # noqa: E402
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.core import DynamicGraph, erdos_renyi, make_workload  # noqa: E402
+from repro.core.dist_host import DistEngine  # noqa: E402
+from repro.data.streams import make_stream, snapshot_split  # noqa: E402
+
+D = 64
+
+
+def run(parts: int, mode: str, n=1500, m=30000, batch=100, n_updates=600):
+    wl = make_workload("gc-s", n_layers=3, d_in=D, d_hidden=D, n_classes=16)
+    src, dst, w = erdos_renyi(n, m, seed=0)
+    snap, holdout = snapshot_split(src, dst, w, 0.1, seed=0)
+    g = DynamicGraph(n, *snap)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(n, D)).astype(np.float32)
+    params = wl.init_params(jax.random.PRNGKey(0))
+    mesh = jax.make_mesh((parts, 8 // parts), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    eng = DistEngine(wl, params, x, g, mesh, mode=mode)
+    stream = make_stream(g, holdout, n_updates, D, seed=1)
+
+    comm, lat = [], []
+    first = True
+    for b in stream.batches(batch):
+        t0 = time.perf_counter()
+        eng.apply_batch(b)
+        dt = time.perf_counter() - t0
+        if not first:       # skip compile batch
+            lat.append(dt)
+            comm.append(eng.last_comm.sum())
+        first = False
+    thr = n_updates / max(sum(lat), 1e-9)
+    print(f"fig12/{mode}/p{parts},{np.median(lat) * 1e6:.1f},"
+          f"throughput={thr:.0f}ups comm_slots={np.mean(comm):.0f} "
+          f"comm_bytes~={np.mean(comm) * D * 4:.0f}", flush=True)
+    return np.mean(comm)
+
+
+def main():
+    comm = {}
+    for parts in (2, 4, 8):
+        for mode in ("ripple", "rc"):
+            comm[(parts, mode)] = run(parts, mode)
+    for parts in (2, 4, 8):
+        ratio = comm[(parts, "rc")] / max(comm[(parts, "ripple")], 1e-9)
+        print(f"fig12/comm-reduction/p{parts},0.0,rc_over_rp={ratio:.1f}x",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

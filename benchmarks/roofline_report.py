@@ -1,0 +1,73 @@
+"""Render the dry-run JSONL into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report dryrun_single.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_t(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.2f}ms"
+    return f"{s * 1e6:.1f}us"
+
+
+def fmt_b(b: float) -> str:
+    for u in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if b < 1024:
+            return f"{b:.1f}{u}"
+        b /= 1024
+    return f"{b:.1f}PiB"
+
+
+def load(paths):
+    recs = []
+    for p in paths:
+        with open(p) as f:
+            for line in f:
+                recs.append(json.loads(line))
+    # keep the LAST record per (cell, mesh) — reruns supersede
+    dedup = {}
+    for r in recs:
+        dedup[(r["cell"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def table(recs) -> str:
+    hdr = ("| cell | mesh | t_compute | t_memory | t_collective | dominant | "
+           "useful/HLO | peak HBM/chip |\n"
+           "|---|---|---|---|---|---|---|---|")
+    rows = [hdr]
+    for r in sorted(recs, key=lambda r: (r["cell"], r["mesh"])):
+        rows.append(
+            f"| {r['cell']} | {r['mesh']} | {fmt_t(r['t_compute_s'])} "
+            f"| {fmt_t(r['t_memory_s'])} | {fmt_t(r['t_collective_s'])} "
+            f"| **{r['dominant']}** | {r['useful_compute_frac']:.2f} "
+            f"| {fmt_b(r['mem_per_device']['peak_bytes'])} |")
+    return "\n".join(rows)
+
+
+def summarize(recs) -> str:
+    from collections import Counter
+    doms = Counter(r["dominant"] for r in recs)
+    worst = sorted(recs, key=lambda r: r["useful_compute_frac"])[:3]
+    coll = sorted(recs, key=lambda r: -r["t_collective_s"])[:3]
+    out = [f"cells: {len(recs)}; dominant terms: {dict(doms)}",
+           "worst useful-compute fraction: "
+           + ", ".join(f"{r['cell']}({r['useful_compute_frac']:.2f})"
+                       for r in worst),
+           "most collective-bound: "
+           + ", ".join(f"{r['cell']}({fmt_t(r['t_collective_s'])})"
+                       for r in coll)]
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1:] or ["dryrun_single.jsonl"])
+    print(table(recs))
+    print()
+    print(summarize(recs))

@@ -1,0 +1,179 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Scaled-down graphs (CPU
+container); the reproduction targets are the paper's *ratios* (RP-vs-RC
+speedup, affected-vertex growth, comm reduction), recorded in
+EXPERIMENTS.md §Paper-fidelity.
+
+    PYTHONPATH=src python -m benchmarks.run            # all figures
+    PYTHONPATH=src python -m benchmarks.run fig9 fig12
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import InferenceState  # noqa: E402
+from benchmarks.common import GRAPHS, engine_for, run_stream, setup  # noqa: E402
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+# ---------------------------------------------------------------------------
+def fig2b_affected_fraction():
+    """Affected-vertex % and per-batch latency vs update batch size (Fig 2b)."""
+    for graph in ("arxiv-like", "products-like"):
+        for bs in (1, 10, 100):
+            wl, g, x, params, holdout = setup(graph, "gc-s", n_layers=3)
+            state = InferenceState.bootstrap(wl, params, x, g)
+            eng = engine_for("ripple", wl, params, g, state)
+            thr, lat, stats = run_stream(eng, g, holdout, 20 * bs, bs, 64)
+            affected = np.mean([max(s.affected_per_hop) for s in stats]) / g.n
+            emit(f"fig2b/{graph}/bs{bs}", lat * 1e6,
+                 f"affected_frac={affected:.4f}")
+
+
+def fig8_strategy_comparison():
+    """Vertex-wise vs layer-wise recompute vs RC vs RIPPLE (Fig 8)."""
+    from repro.core.full import full_inference
+    from repro.core.vertexwise import VertexWiseEngine
+    from repro.core import params_to_numpy
+    import jax.numpy as jnp
+
+    wl, g, x, params, holdout = setup("arxiv-like", "gc-s", n_layers=3)
+    state = InferenceState.bootstrap(wl, params, x, g)
+
+    # DNC analog: vertex-wise recompute of 20 targets
+    vw = VertexWiseEngine(wl, params_to_numpy(params), g, x)
+    t0 = time.perf_counter()
+    vw.infer(np.arange(20))
+    emit("fig8/vertex-wise20", (time.perf_counter() - t0) * 1e6,
+         f"agg_ops={vw.ops}")
+
+    # DRC analog: full layer-wise pass over the whole graph
+    t0 = time.perf_counter()
+    full_inference(wl, params, jnp.asarray(x), *g.coo(), g.in_degree)
+    emit("fig8/layerwise-full", (time.perf_counter() - t0) * 1e6,
+         f"edges={g.num_edges}")
+
+    # RC and RIPPLE on identical batches of 10
+    for kind in ("rc", "ripple"):
+        wl, g, x, params, holdout = setup("arxiv-like", "gc-s", n_layers=3)
+        st = InferenceState.bootstrap(wl, params, x, g)
+        eng = engine_for(kind, wl, params, g, st)
+        thr, lat, stats = run_stream(eng, g, holdout, 100, 10, 64)
+        ops = np.mean([s.numeric_ops for s in stats])
+        emit(f"fig8/{kind}-bs10", lat * 1e6,
+             f"throughput={thr:.0f}ups agg_ops={ops:.0f}")
+
+
+def fig9_single_machine(workloads=("gc-s", "gs-s", "gc-m", "gi-s", "gc-w"),
+                        n_layers=2, tag="fig9"):
+    """Throughput + median latency, 5 workloads x graphs x batch sizes."""
+    for graph in GRAPHS:
+        for name in workloads:
+            for bs in (1, 10, 100, 1000):
+                n_upd = min(2000, 20 * bs)
+                speeds = {}
+                for kind in ("ripple", "rc"):
+                    wl, g, x, params, holdout = setup(graph, name,
+                                                      n_layers=n_layers)
+                    st = InferenceState.bootstrap(wl, params, x, g)
+                    eng = engine_for(kind, wl, params, g, st)
+                    thr, lat, _ = run_stream(eng, g, holdout, n_upd, bs, 64)
+                    speeds[kind] = (thr, lat)
+                thr_rp, lat_rp = speeds["ripple"]
+                thr_rc, _ = speeds["rc"]
+                emit(f"{tag}/{graph}/{name}/bs{bs}", lat_rp * 1e6,
+                     f"rp_ups={thr_rp:.0f} rc_ups={thr_rc:.0f} "
+                     f"speedup={thr_rp / max(thr_rc, 1e-9):.1f}x")
+
+
+def fig10_three_layer():
+    """3-layer workloads on the dense graph (Fig 10)."""
+    fig9_single_machine(workloads=("gc-s", "gc-m"), n_layers=3, tag="fig10")
+
+
+def fig11_latency_vs_affected():
+    """Batch latency vs #affected vertices in the propagation tree (Fig 11)."""
+    for kind in ("ripple", "rc"):
+        wl, g, x, params, holdout = setup("products-like", "gc-s", n_layers=2)
+        st = InferenceState.bootstrap(wl, params, x, g)
+        eng = engine_for(kind, wl, params, g, st)
+        _, _, stats = run_stream(eng, g, holdout, 200, 1, 64)
+        buckets = {}
+        for s in stats:
+            b = int(np.log10(max(s.total_affected, 1)))
+            buckets.setdefault(b, []).append(s.wall_seconds)
+        for b in sorted(buckets):
+            emit(f"fig11/{kind}/affected~1e{b}",
+                 float(np.median(buckets[b])) * 1e6,
+                 f"n={len(buckets[b])}")
+
+
+def fig12_distributed():
+    """Distributed RP vs RC: throughput + comm volume (Figs 12/13).
+
+    Runs in a subprocess with 8 virtual devices (XLA device-count must be
+    set before jax init)."""
+    script = os.path.join(os.path.dirname(__file__), "dist_bench.py")
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    res = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, timeout=1800, env=env)
+    if res.returncode:
+        emit("fig12/FAILED", 0.0, res.stderr.strip()[-200:].replace(",", ";"))
+        return
+    for line in res.stdout.strip().splitlines():
+        if line.startswith("fig12"):
+            parts = line.split(",", 2)
+            emit(parts[0], float(parts[1]), parts[2] if len(parts) > 2 else "")
+
+
+def roofline_table():
+    """Echo the dry-run roofline terms (§Roofline) if the sweep has run."""
+    import json
+    for path in ("dryrun_single.jsonl", "dryrun_multi.jsonl"):
+        full = os.path.join(os.path.dirname(__file__), "..", path)
+        if not os.path.exists(full):
+            continue
+        with open(full) as f:
+            for line in f:
+                r = json.loads(line)
+                t_dom = max(r["t_compute_s"], r["t_memory_s"],
+                            r["t_collective_s"])
+                emit(f"roofline/{r['cell']}/{r['mesh']}", t_dom * 1e6,
+                     f"dom={r['dominant']} useful={r['useful_compute_frac']:.2f}")
+
+
+FIGS = {
+    "fig2b": fig2b_affected_fraction,
+    "fig8": fig8_strategy_comparison,
+    "fig9": fig9_single_machine,
+    "fig10": fig10_three_layer,
+    "fig11": fig11_latency_vs_affected,
+    "fig12": fig12_distributed,
+    "roofline": roofline_table,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(FIGS)
+    print("name,us_per_call,derived")
+    for name in which:
+        FIGS[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Train a ~100M-parameter qwen2-family model for a few hundred steps on CPU
+(same code path that lowers onto the production mesh), with checkpointing.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import LMConfig
+from repro.models.lm.model import init_params
+from repro.models.lm.steps import init_opt_state, make_train_step
+from repro.ckpt import CheckpointManager
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+args = ap.parse_args()
+
+# ~100M params: 8L x d512 x ff2048, 32k vocab
+cfg = LMConfig(name="qwen2-100m", n_layers=8, d_model=512, n_heads=8,
+               n_kv_heads=2, d_ff=2048, vocab=32768, d_head=64,
+               activation="swiglu", qkv_bias=True, max_seq=args.seq,
+               attn_chunk=64, param_dtype="float32", compute_dtype="float32")
+params = init_params(jax.random.PRNGKey(0), cfg)
+n = sum(x.size for x in jax.tree.leaves(params))
+print(f"model: {n / 1e6:.1f}M params")
+
+opt = init_opt_state(cfg, params)
+step = jax.jit(make_train_step(cfg, lr=1e-3))
+ckpt = CheckpointManager(tempfile.mkdtemp(prefix="lm_ckpt_"), every=100)
+
+# synthetic corpus with learnable structure (Zipf tokens + copy pattern)
+rng = np.random.default_rng(0)
+
+
+def sample_batch():
+    z = rng.zipf(1.5, size=(args.batch, args.seq)).clip(0, cfg.vocab - 1)
+    z[:, 1::2] = z[:, 0::2]  # learnable: odd positions copy even ones
+    return jnp.asarray(z, jnp.int32)
+
+
+t0, losses = time.perf_counter(), []
+for i in range(args.steps):
+    params, opt, metrics = step(params, opt, sample_batch())
+    losses.append(float(metrics["loss"]))
+    ckpt.maybe_save(params, i)
+    if i % 50 == 0 or i == args.steps - 1:
+        print(f"step {i:4d}  loss {losses[-1]:.3f}")
+dt = time.perf_counter() - t0
+print(f"first-10-avg {np.mean(losses[:10]):.3f} -> last-10-avg "
+      f"{np.mean(losses[-10:]):.3f} (must decrease); "
+      f"{args.steps * args.batch * args.seq / dt:.0f} tok/s")
+assert np.mean(losses[-10:]) < np.mean(losses[:10]), "training must learn"

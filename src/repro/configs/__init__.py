@@ -1,0 +1,1 @@
+from .registry import ARCHS, get_arch  # noqa: F401

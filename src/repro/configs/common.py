@@ -1,0 +1,114 @@
+"""Cell machinery shared by all architecture configs.
+
+A *cell* is one (architecture x input-shape) pair.  ``Cell.build(mesh)``
+returns everything the dry-run needs to ``jit(...).lower(...)`` with
+ShapeDtypeStruct stand-ins — no parameter or activation is ever allocated
+for the full-size configs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclass
+class Built:
+    """A lowered-ready cell: fn(*args) with shardings + roofline metadata.
+
+    Layer-scanned programs defeat XLA's cost_analysis (while bodies are
+    counted once), so cells may carry *probes*: small fully-unrolled
+    variants whose costs are exactly linear in layer counts.  The dry-run
+    fits cost = design_row . c over the probes and evaluates at
+    ``design_full`` — memory comes from the full scanned compile (exact,
+    buffers genuinely reused across layers).
+    """
+
+    fn: Callable
+    args: tuple                      # ShapeDtypeStructs (pytrees allowed)
+    in_shardings: Any
+    model_flops: float               # analytic useful FLOPs for this step
+    notes: str = ""
+    probes: list = field(default_factory=list)   # [(design_row, builder)]
+    design_full: tuple | None = None
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                        # train | prefill | decode | serve | retrieval
+    builder: Callable                # (mesh) -> Built
+    tags: tuple[str, ...] = ()
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}/{self.shape}"
+
+    def build(self, mesh) -> Built:
+        return self.builder(mesh)
+
+
+def _axis_size(mesh, entry) -> int:
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(mesh, spec: P, aval) -> P:
+    """Drop/move mesh axes whose size does not divide the dimension.
+
+    jit in_shardings require exact divisibility; when e.g. n_kv_heads=2
+    cannot shard over model=16, the axis is moved to another (currently
+    replicated, divisible) dim of the same tensor so the parallelism is
+    preserved (e.g. heads -> head_dim), else dropped to replication.
+    """
+    shape = aval.shape
+    ndim = len(shape)
+    ent = tuple(spec) + (None,) * (ndim - len(tuple(spec)))
+    new = list(ent[:ndim])
+    for i, entry in enumerate(list(new)):
+        if entry is None:
+            continue
+        if shape[i] % _axis_size(mesh, entry) == 0:
+            continue
+        new[i] = None
+        for j in range(ndim):
+            if new[j] is None and j != i and \
+                    shape[j] % _axis_size(mesh, entry) == 0 and shape[j] > 1:
+                new[j] = entry
+                break
+    return P(*new)
+
+
+def named(mesh, spec_tree, abstract=None):
+    """PartitionSpec pytree -> NamedSharding pytree (sanitized if abstract
+    shapes are provided)."""
+    is_p = lambda x: isinstance(x, P)
+    if abstract is not None:
+        spec_tree = jax.tree.map(
+            lambda s, a: sanitize_spec(mesh, s, a) if a is not None and
+            hasattr(a, "shape") and isinstance(s, P) else s,
+            spec_tree, abstract, is_leaf=is_p)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=is_p)
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def dp_axes_of(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def dp_size_of(mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n

@@ -1,0 +1,28 @@
+"""§Perf hillclimb variants of deepseek-v3-671b (beyond-paper optimized):
+
+train_4k   + microbatch=8 gradient accumulation (activation live-range /8)
+decode_32k + cache_latent_tp (MLA cache sharded on the LATENT dim over
+             `model`: the baseline sequence-sharded cache forces SPMD
+             "involuntary full rematerialization" on every cache update;
+             latent-TP keeps updates local and turns attention scores into
+             one small psum over `model`).
+"""
+import dataclasses
+
+from .deepseek_v3_671b import CONFIG as BASE
+from .lm_common import _mk_builder
+from .common import Cell
+
+TRAIN_MB = dataclasses.replace(BASE, microbatch=8)
+# B3: serving shardings + the original sequence-sharded cache.  B0's
+# latent-TP turned out to make GSPMD all-gather the latent cache for the
+# score einsums (gather-over-psum choice) — sequence sharding keeps the
+# cache local and only the (small) per-shard softmax stats cross chips.
+DECODE_LTP = dataclasses.replace(BASE, serving_shardings=True)
+
+CELLS = [
+    Cell("deepseek-v3-opt", "train_4k", "train",
+         _mk_builder(TRAIN_MB, "train", 4096, 256)),
+    Cell("deepseek-v3-opt", "decode_32k", "decode",
+         _mk_builder(DECODE_LTP, "decode", 32768, 128)),
+]

@@ -1,0 +1,18 @@
+"""dimenet [arXiv:2003.03123]: 6 blocks d_hidden=128 n_bilinear=8
+n_spherical=7 n_radial=6 — triplet directional message passing."""
+from functools import partial
+
+from repro.models.gnn.dimenet import init_dimenet, dimenet_forward
+from .gnn_common import gnn_cells
+
+HP = dict(d_hidden=128, n_blocks=6, n_bilinear=8, n_spherical=7, n_radial=6,
+          cutoff=5.0)
+INIT = partial(init_dimenet, **HP)
+FORWARD = partial(dimenet_forward, n_spherical=7, n_radial=6, cutoff=5.0)
+
+CELLS = gnn_cells("dimenet", INIT, FORWARD, molecular=True,
+                  with_triplets=True, d_hidden=128, n_layers=6)
+
+SMOKE_INIT = partial(init_dimenet, d_hidden=16, n_blocks=2, n_bilinear=4,
+                     n_spherical=4, n_radial=4, cutoff=4.0)
+SMOKE_FORWARD = partial(dimenet_forward, n_spherical=4, n_radial=4, cutoff=4.0)

@@ -1,0 +1,132 @@
+"""dlrm-rm2 [arXiv:1906.00091]: 13 dense + 26 sparse, embed 64,
+bot 13-512-256-64, top 512-512-256-1, dot interaction.
+
+Shapes: train_batch (65,536, train), serve_p99 (512, online),
+serve_bulk (262,144, offline), retrieval_cand (1 query x 1M candidates).
+Tables shard row-wise over ``model``; the batch over (pod, data).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.recsys.dlrm import (DLRMConfig, dlrm_forward, dlrm_loss,
+                                      init_dlrm, retrieval_scores,
+                                      rm2_vocab_sizes)
+from repro.train.optim import adamw_init, adamw_update
+from .common import Built, Cell, dp_axes_of, named, sds
+
+CONFIG = DLRMConfig(n_dense=13, n_sparse=26, embed_dim=64,
+                    vocab_sizes=rm2_vocab_sizes(26),
+                    bot_mlp=(512, 256, 64), top_mlp=(512, 512, 256, 1),
+                    multi_hot=1)
+
+SMOKE_CONFIG = DLRMConfig(n_dense=13, n_sparse=6, embed_dim=16,
+                          vocab_sizes=(50, 80, 100, 40, 60, 30),
+                          bot_mlp=(32, 16), top_mlp=(64, 1), multi_hot=1)
+
+
+def _params_abstract(cfg):
+    return jax.eval_shape(lambda: init_dlrm(jax.random.PRNGKey(0), cfg))
+
+
+def _param_specs(cfg):
+    return {
+        "tables": [P("model", None)] * cfg.n_sparse,
+        "bot": [{"w": P(), "b": P()} for _ in cfg.bot_mlp],
+        "top": [{"w": P(), "b": P()} for _ in cfg.top_mlp],
+    }
+
+
+def dlrm_model_flops(cfg: DLRMConfig, batch: int, kind: str) -> float:
+    dims = [cfg.n_dense, *cfg.bot_mlp]
+    bot = sum(2.0 * a * b for a, b in zip(dims, dims[1:]))
+    nf = cfg.n_sparse + 1
+    d_int = nf * (nf - 1) // 2 + cfg.embed_dim
+    dims = [d_int, *cfg.top_mlp]
+    top = sum(2.0 * a * b for a, b in zip(dims, dims[1:]))
+    inter = 2.0 * nf * nf * cfg.embed_dim
+    emb = 2.0 * cfg.n_sparse * cfg.multi_hot * cfg.embed_dim
+    per_item = bot + top + inter + emb
+    return (3.0 if kind == "train" else 1.0) * per_item * batch
+
+
+def build_train(cfg: DLRMConfig, batch: int):
+    def builder(mesh):
+        dp = dp_axes_of(mesh)
+        params_a = _params_abstract(cfg)
+        opt_a = jax.eval_shape(lambda: adamw_init(params_a))
+        p_spec = _param_specs(cfg)
+        o_spec_leaf = jax.tree.map(lambda s: s, p_spec)
+        from repro.train.optim import AdamWState
+        o_spec = AdamWState(step=P(), mu=o_spec_leaf,
+                            nu=jax.tree.map(lambda s: s, p_spec))
+
+        def step(params, opt_state, dense, sparse, labels):
+            loss, grads = jax.value_and_grad(dlrm_loss)(
+                params, cfg, dense, sparse, labels)
+            params, opt_state = adamw_update(grads, opt_state, params, lr=1e-3)
+            return params, opt_state, loss
+
+        args = (params_a, opt_a, sds((batch, cfg.n_dense)),
+                sds((batch, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+                sds((batch,)))
+        in_sh = (named(mesh, p_spec, params_a), named(mesh, o_spec, opt_a),
+                 named(mesh, P(dp, None), args[2]),
+                 named(mesh, P(dp, None, None), args[3]),
+                 named(mesh, P(dp), args[4]))
+        return Built(fn=step, args=args, in_shardings=in_sh,
+                     model_flops=dlrm_model_flops(cfg, batch, "train"))
+    return builder
+
+
+def build_serve(cfg: DLRMConfig, batch: int):
+    def builder(mesh):
+        dp = dp_axes_of(mesh)
+        params_a = _params_abstract(cfg)
+        p_spec = _param_specs(cfg)
+
+        def serve(params, dense, sparse):
+            return dlrm_forward(params, cfg, dense, sparse)
+
+        args = (params_a, sds((batch, cfg.n_dense)),
+                sds((batch, cfg.n_sparse, cfg.multi_hot), jnp.int32))
+        in_sh = (named(mesh, p_spec, params_a),
+                 named(mesh, P(dp, None), args[1]),
+                 named(mesh, P(dp, None, None), args[2]))
+        return Built(fn=serve, args=args, in_shardings=in_sh,
+                     model_flops=dlrm_model_flops(cfg, batch, "serve"))
+    return builder
+
+
+def build_retrieval(cfg: DLRMConfig, n_candidates: int):
+    def builder(mesh):
+        dp = dp_axes_of(mesh)
+        params_a = _params_abstract(cfg)
+        p_spec = _param_specs(cfg)
+
+        def retrieve(params, dense, sparse, cand_emb):
+            return retrieval_scores(params, cfg, dense, sparse, cand_emb)
+
+        args = (params_a, sds((1, cfg.n_dense)),
+                sds((1, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+                sds((n_candidates, cfg.embed_dim)))
+        in_sh = (named(mesh, p_spec, params_a),
+                 named(mesh, P(None, None), args[1]),
+                 named(mesh, P(None, None, None), args[2]),
+                 named(mesh, P(dp, None), args[3]))
+        flops = 2.0 * n_candidates * cfg.embed_dim \
+            + dlrm_model_flops(cfg, 1, "serve")
+        return Built(fn=retrieve, args=args, in_shardings=in_sh,
+                     model_flops=flops)
+    return builder
+
+
+CELLS = [
+    Cell("dlrm-rm2", "train_batch", "train", build_train(CONFIG, 65536)),
+    Cell("dlrm-rm2", "serve_p99", "serve", build_serve(CONFIG, 512)),
+    Cell("dlrm-rm2", "serve_bulk", "serve", build_serve(CONFIG, 262144)),
+    Cell("dlrm-rm2", "retrieval_cand", "retrieval",
+         build_retrieval(CONFIG, 1_000_000)),
+]

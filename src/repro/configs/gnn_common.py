@@ -1,0 +1,172 @@
+"""Shared cell builders for the four GNN architectures.
+
+Shapes (assigned):
+  full_graph_sm  n=2,708  m=10,556   d=1,433  (full-batch train)
+  minibatch_lg   n=232,965 m=114.6M  sampled: 1,024 seeds, fanout 15-10
+  ogb_products   n=2,449,029 m=61.9M d=100    (full-batch-large train)
+  molecule       30 nodes / 64 edges x batch 128 (graph-level regression)
+
+Baseline sharding: node arrays row-sharded and edge/triplet arrays sharded
+over ALL mesh axes flattened (GNNs have no TP dimension; 256-way edge
+parallelism).  GSPMD inserts the gathers/psums — the §Perf hillclimb
+replaces this with RIPPLE-style owner-partitioned message passing.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.gnn.common import GraphBatch
+from repro.models.gnn.sampler import sampled_shape_caps
+from repro.train.optim import adamw_init, adamw_update
+from repro.utils import next_bucket
+from .common import Built, Cell, sds, named
+
+
+SHAPES = {
+    "full_graph_sm": dict(n=2708, m=10556, d=1433, classes=16, kind="train"),
+    "minibatch_lg": dict(n=232965, m=114615892, d=602, classes=41,
+                         batch_nodes=1024, fanout=(15, 10), kind="train"),
+    "ogb_products": dict(n=2449029, m=61859140, d=100, classes=47,
+                         kind="train"),
+    "molecule": dict(n=30 * 128, m=64 * 128, d=32, n_graphs=128,
+                     kind="train"),
+}
+
+
+def all_axes(mesh):
+    return tuple(mesh.axis_names)
+
+
+def gnn_model_flops(arch: str, n: int, m: int, d_in: int, d_hidden: int,
+                    n_layers: int, kind: str, t: int = 0) -> float:
+    """Analytic useful FLOPs: update matmuls + edge messages (x3 for train)."""
+    per_layer = 2.0 * n * d_hidden * d_hidden + 2.0 * m * d_hidden
+    if arch == "nequip":
+        per_layer += 2.0 * m * 15 * d_hidden * 13     # 15 TP paths, <=9+3+1 comps
+    if arch == "dimenet":
+        per_layer += 2.0 * t * (42 * 8 + 8 * d_hidden * d_hidden / d_hidden)
+        per_layer += 2.0 * t * d_hidden * 8           # bilinear
+    emb = 2.0 * n * d_in * d_hidden
+    total = emb + n_layers * per_layer
+    return (3.0 if kind == "train" else 1.0) * total
+
+
+def split_params(params: dict) -> tuple[dict, dict]:
+    """(trainable, aux): keys starting with '_' are non-trainable buffers."""
+    train = {k: v for k, v in params.items() if not k.startswith("_")}
+    aux = {k: v for k, v in params.items() if k.startswith("_")}
+    return train, aux
+
+
+def make_gnn_train_step(forward_fn, loss_kind: str, lr: float = 1e-3,
+                        n_graphs: int | None = None):
+    """Generic GNN train step: forward -> loss -> grads -> AdamW."""
+
+    def loss_fn(train, aux, batch, labels, extra):
+        out = forward_fn({**train, **aux}, batch, *extra)
+        if loss_kind == "node_ce":
+            logits = out.astype(jnp.float32)
+            lse = jax.scipy.special.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+            return jnp.mean(lse - gold)
+        # graph-level regression: segment-sum node outputs per graph
+        energy = jax.ops.segment_sum(out[:, 0], batch.graph_id,
+                                     num_segments=n_graphs)
+        return jnp.mean((energy - labels) ** 2)
+
+    def step(params, opt_state, batch, labels, *extra):
+        train, aux = split_params(params)
+        loss, grads = jax.value_and_grad(loss_fn)(train, aux, batch, labels,
+                                                  extra)
+        train, opt_state = adamw_update(grads, opt_state, train, lr=lr)
+        return {**train, **aux}, opt_state, loss
+
+    return step
+
+
+def _graph_specs(mesh, *, molecular: bool, n_graphs: int | None = None):
+    ax = all_axes(mesh)
+    return GraphBatch(
+        node_feat=P(ax, None), src=P(ax), dst=P(ax), edge_mask=P(ax),
+        positions=P(ax, None) if molecular else None,
+        graph_id=P(ax) if n_graphs else None)
+
+
+def _graph_abstract(n, m, d, *, molecular, n_graphs=None):
+    return GraphBatch(
+        node_feat=sds((n, d)), src=sds((m,), jnp.int32),
+        dst=sds((m,), jnp.int32), edge_mask=sds((m,)),
+        positions=sds((n, 3)) if molecular else None,
+        graph_id=sds((n,), jnp.int32) if n_graphs else None)
+
+
+def build_gnn_train(arch: str, init_fn, forward_fn, shape: dict, *,
+                    molecular: bool, with_triplets: bool = False,
+                    d_hidden: int, n_layers: int):
+    """Builder closure for one GNN cell."""
+
+    def builder(mesh):
+        ax = all_axes(mesh)
+        if "batch_nodes" in shape:   # sampled minibatch training
+            n, m = sampled_shape_caps(shape["batch_nodes"], shape["fanout"])
+        else:
+            n, m = shape["n"], shape["m"]
+        rnd = lambda v: -(-v // 512) * 512   # pad to mesh-divisible sizes
+        n, m = rnd(n), rnd(m)
+        d = shape["d"]
+        n_graphs = shape.get("n_graphs")
+        classes = shape.get("classes")
+        d_out = classes if classes else 1
+
+        params_a = jax.eval_shape(
+            lambda: init_fn(jax.random.PRNGKey(0), d_in=d, d_out=d_out))
+        opt_a = jax.eval_shape(lambda: adamw_init(split_params(params_a)[0]))
+        rep = jax.tree.map(lambda x: P(), params_a)
+        batch_a = _graph_abstract(n, m, d, molecular=molecular,
+                                  n_graphs=n_graphs)
+        batch_s = _graph_specs(mesh, molecular=molecular, n_graphs=n_graphs)
+        if n_graphs:
+            labels_a, labels_s = sds((n_graphs,)), P()
+            loss_kind = "graph_mse"
+        else:
+            labels_a, labels_s = sds((n,), jnp.int32), P(ax)
+            loss_kind = "node_ce"
+
+        extra_a, extra_s = (), ()
+        t = 0
+        if with_triplets:
+            from repro.models.gnn.dimenet import Triplets
+            avg_deg = max(int(round(m / max(n, 1))), 1)
+            # cap at 2^30 triplet slots; beyond that the driver microbatches
+            # (logged in EXPERIMENTS.md — no silent truncation)
+            t = min(next_bucket(m * min(avg_deg + 1, 32)), 1 << 30)
+            extra_a = (Triplets(e_in=sds((t,), jnp.int32),
+                                e_out=sds((t,), jnp.int32),
+                                mask=sds((t,))),)
+            extra_s = (Triplets(e_in=P(ax), e_out=P(ax), mask=P(ax)),)
+
+        fn = make_gnn_train_step(forward_fn, loss_kind, n_graphs=n_graphs)
+        in_sh = (named(mesh, rep), named(mesh, jax.tree.map(lambda x: P(), opt_a)),
+                 named(mesh, batch_s, batch_a), named(mesh, labels_s, labels_a),
+                 *(named(mesh, e, a) for e, a in zip(extra_s, extra_a)))
+        flops = gnn_model_flops(arch, n, m, d, d_hidden, n_layers, "train", t)
+        return Built(fn=fn, args=(params_a, opt_a, batch_a, labels_a, *extra_a),
+                     in_shardings=in_sh, model_flops=flops)
+
+    return builder
+
+
+def gnn_cells(arch: str, init_fn, forward_fn, *, molecular: bool,
+              with_triplets: bool = False, d_hidden: int,
+              n_layers: int) -> list[Cell]:
+    cells = []
+    for shape_name, shape in SHAPES.items():
+        b = build_gnn_train(arch, init_fn, forward_fn, shape,
+                            molecular=molecular, with_triplets=with_triplets,
+                            d_hidden=d_hidden, n_layers=n_layers)
+        cells.append(Cell(arch=arch, shape=shape_name, kind="train", builder=b))
+    return cells

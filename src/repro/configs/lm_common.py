@@ -1,0 +1,174 @@
+"""Shared cell builders for the five LM architectures.
+
+Shapes (assigned): train_4k (seq 4096, gbs 256, train_step);
+prefill_32k (seq 32768, gbs 32); decode_32k (one token, KV cache 32768,
+gbs 128); long_500k (one token, KV cache 524288, gbs 1 — decode is O(S)
+per token, so it runs for full-attention archs too; see DESIGN.md §4).
+
+Cost accounting: the main compile keeps the layer scan (fast compile,
+exact memory analysis) and each cell carries 2-3 small fully-UNROLLED
+probe variants; flops / bytes / collective-bytes are linear in
+(1, n_dense_layers, n_moe_layers), so the dry-run solves that system and
+evaluates at the full depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.lm.config import LMConfig
+from repro.models.lm.model import activation_sharding, init_cache, init_params
+from repro.models.lm.sharding import (cache_specs, dp_axes, opt_state_specs,
+                                      param_specs)
+from repro.models.lm.steps import (init_opt_state, make_decode_step,
+                                   make_prefill_step, make_train_step)
+from .common import Built, Cell, named, sds
+
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def n_params(cfg: LMConfig) -> tuple[float, float]:
+    """(total, active) parameter counts, analytic."""
+    abstract = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    total = sum(x.size for x in jax.tree.leaves(abstract))
+    active = total
+    if cfg.moe is not None:
+        m = cfg.moe
+        expert_keys = ("w_gate", "w_up", "w_in", "w_down", "w_out")
+        moe_blocks = abstract.get("moe_blocks", {})
+        dead = 0
+        for name, leaf in (moe_blocks.get("mlp", {}) or {}).items():
+            if name in expert_keys and leaf.ndim == 4:   # [L, E, ., .]
+                frac = 1.0 - m.top_k / m.n_experts
+                dead += leaf.size * frac
+        active = total - dead
+    return float(total), float(active)
+
+
+def model_flops(cfg: LMConfig, tokens: float, kind: str) -> float:
+    """6ND train / 2ND forward (N = active params)."""
+    total, active = n_params(cfg)
+    coef = 6.0 if kind == "train" else 2.0
+    return coef * active * tokens
+
+
+def _layers(cfg: LMConfig) -> tuple[int, int]:
+    if cfg.moe is None:
+        return cfg.n_layers, 0
+    return cfg.moe.first_k_dense, cfg.n_layers - cfg.moe.first_k_dense
+
+
+def _with_layers(cfg: LMConfig, d: int, m: int) -> LMConfig:
+    """Small fully-unrolled variant with d dense + m MoE layers."""
+    if cfg.moe is None:
+        return dataclasses.replace(cfg, n_layers=d, scan_unroll=True,
+                                   mtp_depth=cfg.mtp_depth)
+    moe = dataclasses.replace(cfg.moe, first_k_dense=d)
+    return dataclasses.replace(cfg, n_layers=d + m, moe=moe, scan_unroll=True)
+
+
+def _probe_rows(cfg: LMConfig):
+    """(design rows, layer combos) for the linear cost fit."""
+    if cfg.moe is None:
+        combos = [(1, 0), (3, 0)]
+    else:
+        # deepseek's MTP block is dense and lives outside the stacks ->
+        # constant term; rows are (1, n_dense, n_moe)
+        combos = [(1, 1), (3, 1), (1, 3)]
+    rows = [(1.0, float(d), float(m)) for d, m in combos]
+    return rows, combos
+
+
+def _params_abstract(cfg: LMConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _mk_builder(cfg: LMConfig, shape_kind: str, seq: int, batch: int,
+                with_probes: bool = True):
+    """Returns builder(mesh) -> Built for one (cfg, kind) cell."""
+
+    def make_fn_and_args(c: LMConfig, mesh):
+        dp = dp_axes(mesh)
+        params_a = _params_abstract(c)
+        p_spec = param_specs(c)
+        if shape_kind == "train":
+            opt_a = jax.eval_shape(lambda: init_opt_state(c, params_a))
+            o_spec = opt_state_specs(p_spec, c.optimizer, params_a)
+            tok = sds((batch, seq), jnp.int32)
+            step = make_train_step(c)
+
+            def fn(params, opt_state, tokens):
+                with activation_sharding(mesh, dp):
+                    return step(params, opt_state, tokens)
+
+            args = (params_a, opt_a, tok)
+            in_sh = (named(mesh, p_spec, params_a), named(mesh, o_spec, opt_a),
+                     named(mesh, P(dp, None), tok))
+        elif shape_kind == "prefill":
+            tok = sds((batch, seq), jnp.int32)
+            step = make_prefill_step(c, max_seq=seq)
+
+            def fn(params, tokens):
+                with activation_sharding(mesh, dp):
+                    return step(params, tokens)
+
+            args = (params_a, tok)
+            in_sh = (named(mesh, p_spec, params_a),
+                     named(mesh, P(dp, None), tok))
+        else:  # decode
+            cache_a = jax.eval_shape(lambda: init_cache(c, batch, seq))
+            c_spec = cache_specs(c, batch, mesh)
+            tok = sds((batch,), jnp.int32)
+            pos = sds((), jnp.int32)
+            step = make_decode_step(c)
+
+            def fn(params, caches, last_tokens, p_):
+                with activation_sharding(mesh, dp):
+                    return step(params, caches, last_tokens, p_)
+
+            args = (params_a, cache_a, tok, pos)
+            in_sh = (named(mesh, p_spec, params_a),
+                     named(mesh, c_spec, cache_a),
+                     named(mesh, P(None), tok), named(mesh, P(), pos))
+        return fn, args, in_sh
+
+    def builder(mesh):
+        fn, args, in_sh = make_fn_and_args(cfg, mesh)
+        n_tok = batch * seq if shape_kind in ("train", "prefill") else batch
+        kind = "train" if shape_kind == "train" else "serve"
+        probes = []
+        design_full = None
+        if with_probes:
+            rows, combos = _probe_rows(cfg)
+            for row, (d, m) in zip(rows, combos):
+                small = _with_layers(cfg, d, m)
+
+                def probe_builder(mesh, small=small):
+                    f, a, s = make_fn_and_args(small, mesh)
+                    return Built(fn=f, args=a, in_shardings=s, model_flops=0.0)
+
+                probes.append((row, probe_builder))
+            dd, mm = _layers(cfg)
+            design_full = (1.0, float(dd), float(mm))
+        return Built(fn=fn, args=args, in_shardings=in_sh,
+                     model_flops=model_flops(cfg, n_tok, kind),
+                     probes=probes, design_full=design_full)
+
+    return builder
+
+
+def lm_cells(arch: str, cfg: LMConfig) -> list[Cell]:
+    cells = []
+    for shape, s in SHAPES.items():
+        b = _mk_builder(cfg, s["kind"], s["seq"], s["batch"])
+        cells.append(Cell(arch=arch, shape=shape, kind=s["kind"], builder=b))
+    return cells

@@ -1,0 +1,17 @@
+"""nequip [arXiv:2101.03164]: 5 layers d_hidden=32 l_max=2 n_rbf=8 cutoff=5,
+E(3) tensor-product messages (Cartesian-irrep adaptation, DESIGN.md §2)."""
+from functools import partial
+
+from repro.models.gnn.nequip import init_nequip, nequip_forward
+from .gnn_common import gnn_cells
+
+HP = dict(d_hidden=32, n_layers=5, l_max=2, n_rbf=8, cutoff=5.0)
+INIT = partial(init_nequip, **HP)
+FORWARD = partial(nequip_forward, n_rbf=8, cutoff=5.0)
+
+CELLS = gnn_cells("nequip", INIT, FORWARD, molecular=True,
+                  d_hidden=32, n_layers=5)
+
+SMOKE_INIT = partial(init_nequip, d_hidden=8, n_layers=2, l_max=2, n_rbf=4,
+                     cutoff=4.0)
+SMOKE_FORWARD = partial(nequip_forward, n_rbf=4, cutoff=4.0)

@@ -1,0 +1,15 @@
+"""pna [arXiv:2004.05718]: 4 layers d_hidden=75, aggregators mean-max-min-std,
+scalers identity-amplification-attenuation."""
+from functools import partial
+
+from repro.models.gnn.pna import init_pna, pna_forward
+from .gnn_common import gnn_cells
+
+INIT = partial(init_pna, d_hidden=75, n_layers=4)
+FORWARD = partial(pna_forward, delta=2.0)
+
+CELLS = gnn_cells("pna", INIT, FORWARD, molecular=False,
+                  d_hidden=75, n_layers=4)
+
+SMOKE_INIT = partial(init_pna, d_hidden=16, n_layers=2)
+SMOKE_FORWARD = FORWARD

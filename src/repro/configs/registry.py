@@ -1,0 +1,41 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/dry-run."""
+from __future__ import annotations
+
+from importlib import import_module
+
+ARCHS = {
+    # LM family
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini_3_8b",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    # GNN family
+    "schnet": "repro.configs.schnet",
+    "pna": "repro.configs.pna",
+    "nequip": "repro.configs.nequip",
+    "dimenet": "repro.configs.dimenet",
+    # RecSys
+    "dlrm-rm2": "repro.configs.dlrm_rm2",
+    # the paper's own workload (extra, beyond the assigned 40 cells)
+    "ripple-papers": "repro.configs.ripple_stream",
+    # §Perf hillclimb variants (beyond-paper optimized cells)
+    "schnet-part": "repro.configs.schnet_part",
+    "deepseek-v3-opt": "repro.configs.deepseek_v3_opt",
+}
+
+
+def get_arch(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return import_module(ARCHS[name])
+
+
+def all_cells(include_extra: bool = False):
+    cells = []
+    for name in ARCHS:
+        if name in ("ripple-papers", "schnet-part", "deepseek-v3-opt") \
+                and not include_extra:
+            continue
+        cells.extend(get_arch(name).CELLS)
+    return cells

@@ -1,0 +1,84 @@
+"""The paper's own workload at production scale: streaming GC-S-3L inference
+on a Papers-100M-class graph, distributed over the full mesh.
+
+This cell lowers the distributed RIPPLE propagate (shard_map + all_to_all
+halo exchange) with ShapeDtypeStruct stand-ins sized for ogbn-papers100M
+(111M vertices, 1.62B edges, 128 features, 172 classes), vertex-partitioned
+over (pod x) data and feature-sharded over model — the flagship dry-run for
+the paper's §5 (beyond the 40 assigned cells).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.distributed import (DistBatch, DistCSR, make_ripple_propagate,
+                                    tp_param_specs)
+from repro.core.workloads import make_workload
+from repro.utils import next_bucket
+from .common import Built, Cell, sds, named
+
+N_VERTICES = 111_059_956
+N_EDGES = 1_615_685_872
+D_FEAT = 128
+D_HID = 128
+N_CLASSES = 176          # padded to /16 for TP divisibility (ogbn: 172)
+N_LAYERS = 3
+# streaming batch of 1000 updates; caps per hop sized for Papers' fan-out
+CAPS = ((1 << 14, 1 << 18), (1 << 18, 1 << 22), (1 << 21, 1 << 25))
+HALO_CAP = 1 << 18
+
+
+def build_ripple(mesh):
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    n_parts = math.prod(mesh.shape[a] for a in data_axes)
+    n_local = -(-N_VERTICES // n_parts)
+    pool = next_bucket(int(N_EDGES / n_parts * 1.3))
+    wl = make_workload("gc-s", n_layers=N_LAYERS, d_in=D_FEAT,
+                       d_hidden=D_HID, n_classes=N_CLASSES)
+    fn = make_ripple_propagate(mesh, wl, n_local, CAPS, HALO_CAP,
+                               data_axes=data_axes)
+
+    dims = wl.spec.dims
+    params_a = jax.eval_shape(
+        lambda: wl.init_params(jax.random.PRNGKey(0)))
+    H_a = tuple(sds((n_parts, n_local, dims[l])) for l in range(N_LAYERS + 1))
+    S_a = (sds((n_parts, n_local, 1)),) + tuple(
+        sds((n_parts, n_local, dims[l])) for l in range(N_LAYERS))
+    k_a = sds((n_parts, n_local))
+    csr_a = DistCSR(col=sds((n_parts, pool), jnp.int32),
+                    w=sds((n_parts, pool)),
+                    start=sds((n_parts, n_local), jnp.int32),
+                    length=sds((n_parts, n_local), jnp.int32))
+    fc = 1 << 10   # 1k-update batch, routed
+    batch_a = DistBatch(
+        feat_idx=sds((n_parts, fc), jnp.int32), feat_val=sds((n_parts, fc, D_FEAT)),
+        add_src=sds((n_parts, fc), jnp.int32), add_dst=sds((n_parts, fc), jnp.int32),
+        add_w=sds((n_parts, fc)), del_src=sds((n_parts, fc), jnp.int32),
+        del_dst=sds((n_parts, fc), jnp.int32), del_w=sds((n_parts, fc)))
+
+    dax = data_axes if len(data_axes) > 1 else data_axes[0]
+    state_h = tuple(P(dax, None, "model") for _ in range(N_LAYERS + 1))
+    state_s = (P(dax, None),) + tuple(P(dax, None, "model")
+                                      for _ in range(N_LAYERS))
+    in_sh = (named(mesh, tp_param_specs(wl)), named(mesh, state_h),
+             named(mesh, state_s), named(mesh, P(dax, None)),
+             named(mesh, DistCSR(col=P(dax, None), w=P(dax, None),
+                                 start=P(dax, None), length=P(dax, None))),
+             named(mesh, DistBatch(
+                 feat_idx=P(dax, None), feat_val=P(dax, None, "model"),
+                 add_src=P(dax, None), add_dst=P(dax, None),
+                 add_w=P(dax, None), del_src=P(dax, None),
+                 del_dst=P(dax, None), del_w=P(dax, None))))
+    # useful FLOPs: 2 ops per message x caps + update matmuls on frontier
+    msg_ops = sum(2.0 * e * D_HID for _, e in CAPS)
+    upd_ops = sum(2.0 * r * D_HID * D_HID for r, _ in CAPS)
+    return Built(fn=fn, args=(params_a, H_a, S_a, k_a, csr_a, batch_a),
+                 in_shardings=in_sh, model_flops=msg_ops + upd_ops,
+                 notes="paper §5 distributed streaming step, Papers-100M scale")
+
+
+CELLS = [Cell("ripple-papers", "stream_1k", "stream", build_ripple)]

@@ -1,0 +1,9 @@
+# RIPPLE's primary contribution: incremental layer-wise GNN inference over
+# streaming graphs.  Single-machine engines here; distributed engine in
+# distributed.py; TPU-jitted engine in device_engine.py.
+from .graph import (DynamicGraph, EdgeUpdate, FeatureUpdate,  # noqa: F401
+                    UpdateBatch, erdos_renyi, powerlaw_graph)
+from .workloads import WORKLOAD_NAMES, Workload, make_workload  # noqa: F401
+from .state import InferenceState, params_to_numpy  # noqa: F401
+from .full import full_inference, predict_labels  # noqa: F401
+from .engine import BatchStats, RecomputeEngine, RippleEngine  # noqa: F401

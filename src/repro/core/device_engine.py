@@ -1,0 +1,278 @@
+"""TPU-native fully-jitted RIPPLE propagation (single replica).
+
+The host engine (engine.py) drives NumPy; this module is the hardware
+adaptation (DESIGN.md §2): the entire L-hop propagation of one update batch
+is ONE jitted function with *static bucket capacities*, so XLA compiles a
+fixed dataflow while the work stays proportional to the frontier size
+(the paper's k'-incrementality), not to |V| or |E|:
+
+ - the frontier is a padded index vector (sentinel = n) + aligned deltas;
+ - frontier out-edges are expanded with a vectorized ragged gather
+   (cumsum + searchsorted) into an edge bucket of static size E_cap;
+ - mailboxes are *compacted*: messages are sorted by destination and
+   segment-summed into R_cap rows — no dense [n, d] buffer is ever built,
+   which keeps per-hop HBM traffic O(frontier), not O(n);
+ - self-dependent workloads (SAGE/GIN) inject zero-valued messages from the
+   frontier to itself so "recipients" uniformly equals "affected".
+
+Overflow of any bucket is reported (never silently truncated); the caller
+retries with the next power-of-two bucket.  The function is functional
+(returns new state), so a failed attempt commits nothing.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import DynamicGraph
+from .workloads import Workload
+
+
+class DeviceCSR(NamedTuple):
+    """Out-adjacency mirrored on device (slacked-CSR pool layout)."""
+
+    col: jax.Array    # [pool] int32, -1 in slack slots
+    w: jax.Array      # [pool] f32
+    start: jax.Array  # [n] int32
+    length: jax.Array  # [n] int32
+
+    @classmethod
+    def from_graph(cls, g: DynamicGraph) -> "DeviceCSR":
+        return cls(col=jnp.asarray(g.out.col, dtype=jnp.int32),
+                   w=jnp.asarray(g.out.w),
+                   start=jnp.asarray(g.out.start, dtype=jnp.int32),
+                   length=jnp.asarray(g.out.length, dtype=jnp.int32))
+
+
+class DeviceState(NamedTuple):
+    H: tuple[jax.Array, ...]  # [n, d_l] per layer 0..L
+    S: tuple[jax.Array, ...]  # [n, d_{l-1}] per layer 1..L ([0] placeholder)
+    k: jax.Array              # [n] in-degree
+
+
+class BatchDev(NamedTuple):
+    """A routed update batch in padded device form (sentinel index = n)."""
+
+    feat_idx: jax.Array   # [Fv] int32, vertex ids (n = pad)
+    feat_val: jax.Array   # [Fv, d0]
+    add_src: jax.Array    # [A] int32 (n = pad)
+    add_dst: jax.Array
+    add_w: jax.Array
+    del_src: jax.Array    # [D] int32 (n = pad)
+    del_dst: jax.Array
+    del_w: jax.Array
+
+
+def _hop_messages(n: int, h_l: jax.Array, csr: DeviceCSR,
+                  frontier: jax.Array, delta: jax.Array,
+                  batch: BatchDev, *, weighted: bool, self_dep: bool,
+                  e_cap: int):
+    """Build the (dst, value) message stream for hop l -> l+1.
+
+    Returns (all_dst [E_tot], all_val [E_tot, d], n_edges_needed) where
+    E_tot = e_cap + A + D (+ F for self-dep zero-messages).
+    """
+    f_cap = frontier.shape[0]
+    degs = jnp.where(frontier < n, csr.length[jnp.minimum(frontier, n - 1)], 0)
+    csum = jnp.cumsum(degs)
+    total = csum[-1] if f_cap else jnp.int32(0)
+
+    # ragged expansion of frontier out-edges into the static edge bucket
+    e = jnp.arange(e_cap, dtype=jnp.int32)
+    fid = jnp.searchsorted(csum, e, side="right").astype(jnp.int32)
+    fid_c = jnp.minimum(fid, f_cap - 1)
+    row_begin = csum[fid_c] - degs[fid_c]
+    off = e - row_begin
+    vsrc = frontier[fid_c]
+    flat = csr.start[jnp.minimum(vsrc, n - 1)] + off
+    evalid = e < total
+    flat = jnp.where(evalid, flat, 0)
+    edst = jnp.where(evalid, csr.col[flat], n)
+    ew = csr.w[flat] if weighted else jnp.ones(e_cap, dtype=h_l.dtype)
+    evals = delta[fid_c] * (ew * evalid)[:, None]
+
+    # position map frontier-vertex -> delta slot, for h_old lookups
+    pos = jnp.full((n,), -1, dtype=jnp.int32)
+    pos = pos.at[frontier].set(jnp.arange(f_cap, dtype=jnp.int32), mode="drop")
+
+    def h_old(src: jax.Array) -> jax.Array:
+        src_c = jnp.minimum(src, n - 1)
+        h = h_l[src_c]
+        slot = pos[src_c]
+        sub = jnp.where((slot >= 0)[:, None], delta[jnp.maximum(slot, 0)], 0.0)
+        return h - sub
+
+    a_valid = (batch.add_src < n)[:, None]
+    aw = batch.add_w if weighted else jnp.ones_like(batch.add_w)
+    a_val = h_old(batch.add_src) * aw[:, None] * a_valid
+    d_valid = (batch.del_src < n)[:, None]
+    dw = batch.del_w if weighted else jnp.ones_like(batch.del_w)
+    d_val = -h_old(batch.del_src) * dw[:, None] * d_valid
+
+    dsts = [edst, batch.add_dst, batch.del_dst]
+    vals = [evals, a_val, d_val]
+    if self_dep:
+        dsts.append(frontier)
+        vals.append(jnp.zeros_like(delta))
+    return jnp.concatenate(dsts), jnp.concatenate(vals), total
+
+
+def _compact_mailbox(n: int, all_dst: jax.Array, all_val: jax.Array,
+                     r_cap: int):
+    """Sort-by-destination compaction: unique recipients + summed mailboxes.
+
+    Returns (rec_idx [r_cap] sentinel-padded, mailbox [r_cap, d], n_recipients).
+    """
+    order = jnp.argsort(all_dst)  # sentinels (n) sort to the end
+    sd = all_dst[order]
+    sv = all_val[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), sd[1:] != sd[:-1]])
+    is_real = sd < n
+    newseg = first & is_real
+    seg_id = jnp.cumsum(newseg) - 1
+    seg_id = jnp.where(is_real, seg_id, r_cap).astype(jnp.int32)
+    mailbox = jax.ops.segment_sum(sv, seg_id, num_segments=r_cap + 1)[:r_cap]
+    n_rec = newseg.sum()
+    rec_idx = jnp.full((r_cap,), n, dtype=jnp.int32)
+    rec_idx = rec_idx.at[jnp.where(newseg, seg_id, r_cap)].set(sd, mode="drop")
+    return rec_idx, mailbox, n_rec
+
+
+def _apply_hop(workload: Workload, params_l: dict, layer: int, n: int,
+               state: DeviceState, rec_idx: jax.Array, mailbox: jax.Array):
+    """Apply mailboxes at hop layer+1; returns (new state, next delta)."""
+    aff_c = jnp.minimum(rec_idx, n - 1)
+    valid = (rec_idx < n)[:, None]
+    S_next = state.S[layer + 1]
+    S_rows = S_next[aff_c] + mailbox
+    S_next = S_next.at[rec_idx].set(S_rows, mode="drop")
+    x = workload.normalize(S_rows, state.k[aff_c])
+    h_prev = state.H[layer][aff_c]
+    h_new = workload.update_fn(layer)(params_l, h_prev, x)
+    delta = (h_new - state.H[layer + 1][aff_c]) * valid
+    H_next = state.H[layer + 1].at[rec_idx].set(h_new, mode="drop")
+    new_state = DeviceState(
+        H=state.H[: layer + 1] + (H_next,) + state.H[layer + 2:],
+        S=state.S[: layer + 1] + (S_next,) + state.S[layer + 2:],
+        k=state.k)
+    return new_state, delta
+
+
+@partial(jax.jit, static_argnames=("workload", "n", "caps"))
+def propagate(workload: Workload, n: int, caps: tuple[tuple[int, int], ...],
+              params: list[dict], state: DeviceState, csr: DeviceCSR,
+              batch: BatchDev):
+    """One full L-hop incremental propagation of a routed batch.
+
+    caps[l] = (frontier_cap entering hop l+1 computation, edge_cap at hop l).
+    Returns (new_state, final_affected idx, overflow flag).
+    """
+    L = workload.spec.n_layers
+    spec = workload.spec
+
+    # hop 0: apply feature updates
+    fv = batch.feat_idx
+    old = state.H[0][jnp.minimum(fv, n - 1)]
+    delta0 = (batch.feat_val - old) * (fv < n)[:, None]
+    H0 = state.H[0].at[fv].set(batch.feat_val, mode="drop")
+    state = DeviceState(H=(H0,) + state.H[1:], S=state.S, k=state.k)
+    frontier, delta = fv, delta0
+    overflow = jnp.zeros((), dtype=bool)
+
+    for l in range(L):
+        r_cap, e_cap = caps[l]
+        all_dst, all_val, needed = _hop_messages(
+            n, state.H[l], csr, frontier, delta, batch,
+            weighted=spec.weighted, self_dep=spec.self_dependent, e_cap=e_cap)
+        overflow |= needed > e_cap
+        rec_idx, mailbox, n_rec = _compact_mailbox(n, all_dst, all_val, r_cap)
+        overflow |= n_rec > r_cap
+        state, delta = _apply_hop(workload, params[l], l, n, state, rec_idx,
+                                  mailbox)
+        frontier = rec_idx
+
+    return state, frontier, overflow
+
+
+class DeviceEngine:
+    """Host driver around the jitted propagation with a bucket ladder.
+
+    Mirrors RippleEngine semantics; used by tests for cross-engine
+    equivalence and by the dry-run/roofline path for the paper's own
+    workloads.
+    """
+
+    def __init__(self, workload: Workload, params: list[dict],
+                 graph: DynamicGraph, state_np, *, min_bucket: int = 64):
+        from repro.utils import next_bucket
+        self._next_bucket = next_bucket
+        self.workload = workload
+        self.params = [{k: jnp.asarray(v) for k, v in p.items()} for p in params]
+        self.graph = graph
+        self.n = graph.n
+        self.state = DeviceState(
+            H=tuple(jnp.asarray(h) for h in state_np.H),
+            S=tuple(jnp.asarray(s) for s in state_np.S),
+            k=jnp.asarray(graph.in_degree))
+        self.min_bucket = min_bucket
+
+    def _pad_batch(self, batch) -> BatchDev:
+        from repro.utils import pad_to
+        n = self.n
+        d0 = self.state.H[0].shape[1]
+        adds, dels = self.graph.apply_topology(batch.edges)
+        self.state = self.state._replace(k=jnp.asarray(self.graph.in_degree))
+        fa = np.array([f.vertex for f in batch.features], dtype=np.int32)
+        fx = (np.stack([f.value for f in batch.features]).astype(np.float32)
+              if batch.features else np.zeros((0, d0), np.float32))
+        # last-writer-wins for duplicate feature updates
+        if fa.size:
+            uniq, last = np.unique(fa[::-1], return_index=True)
+            fa, fx = uniq.astype(np.int32), fx[::-1][last]
+        cap = max(self.min_bucket,
+                  self._next_bucket(max(len(fa), len(adds), len(dels), 1)))
+        mk = lambda a, fill: jnp.asarray(pad_to(np.asarray(a), cap, fill))
+        return BatchDev(
+            feat_idx=mk(fa, n) if fa.size else jnp.full((cap,), n, jnp.int32),
+            feat_val=jnp.asarray(pad_to(fx, cap)),
+            add_src=mk([e.src for e in adds] or [n], n),
+            add_dst=mk([e.dst for e in adds] or [n], n),
+            add_w=jnp.asarray(pad_to(np.array([e.weight for e in adds] or [0.0],
+                                              np.float32), cap)),
+            del_src=mk([e.src for e in dels] or [n], n),
+            del_dst=mk([e.dst for e in dels] or [n], n),
+            del_w=jnp.asarray(pad_to(np.array([e.weight for e in dels] or [0.0],
+                                              np.float32), cap)))
+
+    def apply_batch(self, batch) -> np.ndarray:
+        """Returns final-hop affected vertex ids."""
+        dev_batch = self._pad_batch(batch)
+        csr = DeviceCSR.from_graph(self.graph)
+        L = self.workload.spec.n_layers
+        r = max(self.min_bucket, int(dev_batch.feat_idx.shape[0]))
+        e = 4 * r
+        while True:
+            caps = []
+            rr, ee = r, e
+            for _ in range(L):
+                caps.append((rr, ee))
+                rr = min(self._next_bucket(rr * 4), self._next_bucket(self.n))
+                ee = min(self._next_bucket(ee * 4),
+                         self._next_bucket(max(self.graph.num_edges, 1)) * 2)
+            new_state, final, overflow = propagate(
+                self.workload, self.n, tuple(caps), self.params, self.state,
+                csr, dev_batch)
+            if not bool(overflow):
+                self.state = new_state
+                f = np.asarray(final)
+                return f[f < self.n]
+            r = self._next_bucket(r * 4)
+            e = self._next_bucket(e * 4)
+
+    # -- test helpers -----------------------------------------------------
+    def host_H(self) -> list[np.ndarray]:
+        return [np.asarray(h) for h in self.state.H]

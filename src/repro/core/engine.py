@@ -1,0 +1,267 @@
+"""RIPPLE single-machine incremental engine + layer-wise recompute baseline.
+
+The incremental engine (``RippleEngine``) is the paper's §4.3: a strictly
+look-forward propagation where each affected vertex applies *delta messages*
+from only its changed in-neighbors, then emits deltas to its out-neighbors'
+next-hop mailboxes.  The recompute engine (``RecomputeEngine``, the paper's
+"RC") shares the identical frontier expansion but re-aggregates *every*
+in-neighbor of each affected vertex at each hop — the k vs 2k' contrast the
+paper quantifies in §4.3.3.
+
+Message algebra (exactness proof sketch, see tests/test_engine_equivalence):
+at hop ``l`` with current adjacency A' (topology updates already applied),
+the mailbox contribution to v is
+
+    sum_{(u,v) in A', u in F_l}  alpha * Delta_l[u]          (persistent scan)
+  + sum_{(u,v) added}            alpha * h_old_l[u]          (add correction)
+  - sum_{(u,v) deleted}          alpha * h_old_l[u]          (delete correction)
+
+with ``h_old = H_l[u] - Delta_l[u]``.  Summing cases shows S' = S + mailbox
+equals the from-scratch aggregate over A' of the *new* h_l — exactly, for
+every linear aggregator; ``mean`` stays exact because (S, k) are tracked
+separately and k is updated with the topology.
+
+This engine is NumPy host-side, mirroring the paper's own implementation
+(§6, "implemented natively in Python ... leverage NumPy").  The TPU-native
+jitted and distributed engines (device_engine.py, distributed.py) share its
+semantics and are tested against it.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .graph import DynamicGraph, EdgeUpdate, UpdateBatch, flat_row_indices
+from .state import InferenceState
+from .workloads import Workload
+
+_F = np.float32
+
+
+@dataclass
+class BatchStats:
+    """Per-batch instrumentation (drives Fig. 2b / 9 / 11 benchmarks)."""
+
+    affected_per_hop: list[int] = field(default_factory=list)
+    messages_per_hop: list[int] = field(default_factory=list)
+    numeric_ops: int = 0        # aggregation element-ops (paper's k vs 2k')
+    wall_seconds: float = 0.0
+    final_affected: np.ndarray | None = None
+
+    @property
+    def total_affected(self) -> int:
+        return int(sum(self.affected_per_hop))
+
+
+def _np_update(workload: Workload, params_np: list[dict], layer: int,
+               h_prev: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """NumPy mirror of workloads._FAMILY_UPDATE (kept in lockstep by tests)."""
+    p = params_np[layer]
+    last = layer == workload.spec.n_layers - 1
+    fam = workload.family
+    if fam == "gc":
+        out = x @ p["w"] + p["b"]
+    elif fam == "sage":
+        out = h_prev @ p["w_self"] + x @ p["w_nbr"] + p["b"]
+    elif fam == "gin":
+        z = (1.0 + p["eps"]) * h_prev + x
+        out = np.maximum(z @ p["w1"] + p["b1"], 0.0) @ p["w2"] + p["b2"]
+    else:
+        raise ValueError(fam)
+    return out if last else np.maximum(out, 0.0)
+
+
+def _np_normalize(workload: Workload, S: np.ndarray, k: np.ndarray) -> np.ndarray:
+    if workload.spec.aggregator == "mean":
+        return S / np.maximum(k, 1.0)[:, None]
+    return S
+
+
+class _EngineBase:
+    def __init__(self, workload: Workload, params_np: list[dict],
+                 graph: DynamicGraph, state: InferenceState):
+        self.workload = workload
+        self.params = params_np
+        self.graph = graph
+        self.state = state
+        # dense vertex->frontier-slot map reused across hops (reset after use)
+        self._pos = np.full(graph.n, -1, dtype=np.int64)
+
+    # -- shared: apply feature updates at hop 0 ---------------------------
+    def _apply_features(self, batch: UpdateBatch) -> tuple[np.ndarray, np.ndarray]:
+        if not batch.features:
+            d0 = self.state.H[0].shape[1]
+            return np.empty(0, dtype=np.int64), np.empty((0, d0), dtype=_F)
+        vs = np.array([f.vertex for f in batch.features], dtype=np.int64)
+        vals = np.stack([np.asarray(f.value, dtype=_F) for f in batch.features])
+        # multiple updates to the same vertex in one batch: last-writer-wins
+        uniq, last_idx = np.unique(vs[::-1], return_index=True)
+        vals = vals[::-1][last_idx]
+        delta = vals - self.state.H[0][uniq]
+        self.state.H[0][uniq] = vals
+        return uniq, delta
+
+
+class RippleEngine(_EngineBase):
+    """The paper's incremental engine (single machine)."""
+
+    def apply_batch(self, batch: UpdateBatch) -> BatchStats:
+        t0 = time.perf_counter()
+        stats = BatchStats()
+        g, st, wl = self.graph, self.state, self.workload
+        L = wl.spec.n_layers
+
+        adds, dels = g.apply_topology(batch.edges)
+        st.k = g.in_degree  # degree vector is shared with the graph store
+        add_src = np.array([e.src for e in adds], dtype=np.int64)
+        add_dst = np.array([e.dst for e in adds], dtype=np.int64)
+        add_w = np.array([e.weight for e in adds], dtype=_F)
+        del_src = np.array([e.src for e in dels], dtype=np.int64)
+        del_dst = np.array([e.dst for e in dels], dtype=np.int64)
+        del_w = np.array([e.weight for e in dels], dtype=_F)
+        if not wl.spec.weighted:
+            add_w = np.ones_like(add_w)
+            del_w = np.ones_like(del_w)
+
+        frontier, delta = self._apply_features(batch)
+        stats.affected_per_hop.append(len(frontier))
+
+        for l in range(L):
+            # ---- compute messages into hop l+1 mailboxes -----------------
+            # persistent scan: out-edges of frontier under CURRENT adjacency
+            if frontier.size:
+                degs = g.out.length[frontier]
+                total = int(degs.sum())
+                rep = np.repeat(np.arange(frontier.size), degs)
+                flat = flat_row_indices(g.out.start[frontier], degs)
+                m_dst = g.out.col[flat]
+                m_w = g.out.w[flat] if wl.spec.weighted else np.ones(total, dtype=_F)
+                m_val = delta[rep] * m_w[:, None]
+            else:
+                m_dst = np.empty(0, dtype=np.int64)
+                m_val = np.empty((0, st.H[l].shape[1]), dtype=_F)
+
+            # add/delete corrections use h_old = H_l - Delta_l
+            self._pos[frontier] = np.arange(frontier.size)
+
+            def h_old(us: np.ndarray) -> np.ndarray:
+                h = st.H[l][us].copy()
+                slot = self._pos[us]
+                hit = slot >= 0
+                if hit.any():
+                    h[hit] -= delta[slot[hit]]
+                return h
+
+            corr_dst = [m_dst]
+            corr_val = [m_val]
+            if add_src.size:
+                corr_dst.append(add_dst)
+                corr_val.append(h_old(add_src) * add_w[:, None])
+            if del_src.size:
+                corr_dst.append(del_dst)
+                corr_val.append(-h_old(del_src) * del_w[:, None])
+            self._pos[frontier] = -1
+
+            all_dst = np.concatenate(corr_dst)
+            all_val = np.concatenate(corr_val)
+            stats.messages_per_hop.append(int(all_dst.shape[0]))
+            stats.numeric_ops += 2 * int(all_dst.shape[0])  # negate+aggregate
+
+            # ---- accumulate mailboxes (segment-sum by destination) -------
+            recipients, inv = np.unique(all_dst, return_inverse=True)
+            mailbox = np.zeros((recipients.size, all_val.shape[1]), dtype=_F)
+            np.add.at(mailbox, inv, all_val)
+
+            # ---- apply phase at hop l+1 ----------------------------------
+            if wl.spec.self_dependent and frontier.size:
+                affected = np.union1d(recipients, frontier)
+            else:
+                affected = recipients
+            if affected.size == 0:
+                stats.affected_per_hop.append(0)
+                frontier = affected
+                delta = np.empty((0, st.H[l + 1].shape[1]), dtype=_F)
+                continue
+
+            # scatter mailbox into S[l+1] rows of affected vertices
+            self._pos[affected] = np.arange(affected.size)
+            slot = self._pos[recipients]
+            S_rows = st.S[l + 1][affected]
+            S_rows[slot] += mailbox
+            st.S[l + 1][affected] = S_rows
+            self._pos[affected] = -1
+
+            x = _np_normalize(wl, S_rows, st.k[affected])
+            h_new = _np_update(wl, self.params, l, st.H[l][affected], x)
+            delta = h_new - st.H[l + 1][affected]
+            st.H[l + 1][affected] = h_new
+            frontier = affected
+            stats.affected_per_hop.append(int(affected.size))
+
+        stats.final_affected = frontier
+        stats.wall_seconds = time.perf_counter() - t0
+        return stats
+
+
+class RecomputeEngine(_EngineBase):
+    """Layer-wise recompute scoped to the affected neighborhood ("RC", §4.2).
+
+    Identical frontier expansion to RIPPLE, but every affected vertex
+    re-aggregates ALL of its in-neighbors at each hop (the paper's k-ops
+    baseline).  The mailbox machinery is unnecessary — only the affected
+    sets propagate.
+    """
+
+    def apply_batch(self, batch: UpdateBatch) -> BatchStats:
+        t0 = time.perf_counter()
+        stats = BatchStats()
+        g, st, wl = self.graph, self.state, self.workload
+        L = wl.spec.n_layers
+
+        adds, dels = g.apply_topology(batch.edges)
+        st.k = g.in_degree
+        touch_dst = np.array([e.dst for e in adds] + [e.dst for e in dels],
+                             dtype=np.int64)
+
+        frontier, _ = self._apply_features(batch)
+        stats.affected_per_hop.append(len(frontier))
+
+        for l in range(L):
+            # affected at hop l+1: out-nbrs of frontier + dsts of edge
+            # updates (which inject/remove a contribution at every hop)
+            if frontier.size:
+                flat = flat_row_indices(g.out.start[frontier], g.out.length[frontier])
+                out_dst = g.out.col[flat]
+            else:
+                out_dst = np.empty(0, dtype=np.int64)
+            affected = np.unique(np.concatenate([out_dst, touch_dst]))
+            if wl.spec.self_dependent and frontier.size:
+                affected = np.union1d(affected, frontier)
+            stats.affected_per_hop.append(int(affected.size))
+            if affected.size == 0:
+                frontier = affected
+                continue
+
+            # full re-aggregation over ALL in-neighbors of affected vertices
+            in_degs = g.inn.length[affected]
+            total = int(in_degs.sum())
+            flat = flat_row_indices(g.inn.start[affected], in_degs)
+            nbr = g.inn.col[flat]
+            w = g.inn.w[flat] if wl.spec.weighted else np.ones(total, dtype=_F)
+            seg = np.repeat(np.arange(affected.size), in_degs)
+            S_rows = np.zeros((affected.size, st.H[l].shape[1]), dtype=_F)
+            np.add.at(S_rows, seg, st.H[l][nbr] * w[:, None])
+            stats.numeric_ops += int(total)
+            stats.messages_per_hop.append(int(total))
+            st.S[l + 1][affected] = S_rows
+
+            x = _np_normalize(wl, S_rows, st.k[affected])
+            h_new = _np_update(wl, self.params, l, st.H[l][affected], x)
+            st.H[l + 1][affected] = h_new
+            frontier = affected
+
+        stats.final_affected = frontier
+        stats.wall_seconds = time.perf_counter() - t0
+        return stats

@@ -1,0 +1,57 @@
+"""Full layer-wise GNN inference (bootstrap + correctness oracle).
+
+This is the static-graph baseline (DGI-style layer-wise inference, paper §2.1):
+each layer aggregates over *all* edges with one segment-sum and applies the
+UPDATE function to *all* vertices.  It bootstraps the engine state
+(H^0..H^L, S^1..S^L) before streaming updates arrive, and serves as the
+exact oracle for every incremental engine in the tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .workloads import Workload
+
+
+@partial(jax.jit, static_argnames=("n",))
+def aggregate_all(h: jax.Array, src: jax.Array, dst: jax.Array, w: jax.Array,
+                  n: int) -> jax.Array:
+    """S[v] = sum_{(u,v) in E} w_uv * h[u]   — one dense segment-sum."""
+    msgs = h[src] * w[:, None]
+    return jax.ops.segment_sum(msgs, dst, num_segments=n)
+
+
+def full_inference(workload: Workload, params: list[dict], x: jax.Array,
+                   src: np.ndarray, dst: np.ndarray, w: np.ndarray,
+                   in_degree: np.ndarray) -> tuple[list[jax.Array], list[jax.Array]]:
+    """Run layer-wise inference over the whole graph.
+
+    Returns (H, S): H[l] for l=0..L embeddings, S[l] for l=1..L unnormalized
+    aggregates (S[0] is a placeholder empty array for index alignment).
+    """
+    n = x.shape[0]
+    src = jnp.asarray(src)
+    dst = jnp.asarray(dst)
+    if not workload.spec.weighted:
+        # edge weights are an edge *property*; only the weighted-sum
+        # aggregator consumes them (sum/mean treat every edge as 1)
+        w = np.ones_like(w)
+    w = jnp.asarray(w, dtype=x.dtype)
+    k = jnp.asarray(in_degree, dtype=x.dtype)
+    H = [x]
+    S: list[jax.Array] = [jnp.zeros((0,), dtype=x.dtype)]
+    for l in range(workload.spec.n_layers):
+        s_l = aggregate_all(H[l], src, dst, w, n)
+        x_l = workload.normalize(s_l, k)
+        h_l = workload.update_fn(l)(params[l], H[l], x_l)
+        S.append(s_l)
+        H.append(h_l)
+    return H, S
+
+
+def predict_labels(h_final: jax.Array) -> jax.Array:
+    return jnp.argmax(h_final, axis=-1)

@@ -1,0 +1,59 @@
+"""Engine state: per-layer embeddings + unnormalized aggregates + degrees.
+
+RIPPLE's assumption (§4.1): initial embeddings for all layers are
+bootstrapped with the trained model before updates arrive.  We additionally
+keep the *unnormalized* aggregate S^l and in-degree k so that ``mean``
+aggregation stays exact when topology updates change degrees (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from .full import full_inference
+from .graph import DynamicGraph
+from .workloads import Workload
+
+
+@dataclass
+class InferenceState:
+    """Mutable per-vertex state owned by an engine."""
+
+    H: list[np.ndarray]  # H[0..L]: embeddings per layer; H[0] = features
+    S: list[np.ndarray]  # S[1..L]: unnormalized aggregates (S[0] unused)
+    k: np.ndarray        # in-degree (float32), shared across layers
+
+    @classmethod
+    def bootstrap(cls, workload: Workload, params: list[dict],
+                  x: np.ndarray, graph: DynamicGraph) -> "InferenceState":
+        src, dst, w = graph.coo()
+        H, S = full_inference(workload, params, jax.numpy.asarray(x),
+                              src, dst, w, graph.in_degree)
+        # np.array(copy=True): jax arrays convert to read-only views otherwise
+        return cls(H=[np.array(h, dtype=np.float32) for h in H],
+                   S=[np.array(s, dtype=np.float32) for s in S],
+                   k=graph.in_degree.copy())
+
+    def clone(self) -> "InferenceState":
+        return InferenceState(H=[h.copy() for h in self.H],
+                              S=[s.copy() for s in self.S],
+                              k=self.k.copy())
+
+    @property
+    def n(self) -> int:
+        return self.H[0].shape[0]
+
+    def labels(self) -> np.ndarray:
+        return np.argmax(self.H[-1], axis=-1)
+
+    def nbytes(self) -> int:
+        return (sum(h.nbytes for h in self.H) + sum(s.nbytes for s in self.S)
+                + self.k.nbytes)
+
+
+def params_to_numpy(params: list[dict]) -> list[dict]:
+    return [{k: np.asarray(v, dtype=np.float32) for k, v in p.items()}
+            for p in params]

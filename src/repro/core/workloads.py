@@ -1,0 +1,130 @@
+"""The paper's five GNN inference workloads (§7.1.1).
+
+GC-S  GraphConv + sum            h^l = relu(W_l x^l + b_l)
+GS-S  GraphSAGE + sum            h^l = relu(W_self h^{l-1} + W_nbr x^l + b_l)
+GC-M  GraphConv + mean           x^l = S^l / k
+GI-S  GINConv + sum              h^l = MLP_l((1+eps) h^{l-1} + x^l)
+GC-W  GraphConv + weighted sum   x^l = sum_j alpha_ij h_j
+
+where S^l is the *unnormalized* aggregate of h^{l-1} over in-neighbors and
+x^l its normalized form.  Storing (S, k) instead of x keeps ``mean`` exact
+under in-degree changes from streaming topology updates (DESIGN.md §2).
+
+Each workload is a pure-function spec: parameter pytree + an ``update_fn``
+mapping (params_l, h_prev, S, k) -> h_l.  All engines (full, RC, RIPPLE,
+distributed) share these definitions so correctness tests compare engines,
+never re-implementations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Aggregator = str  # "sum" | "mean" | "wsum"
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """A GNN inference workload: model family x aggregation function."""
+
+    name: str
+    aggregator: Aggregator
+    self_dependent: bool  # does h^l read h^{l-1}_self directly?
+    n_layers: int
+    dims: tuple[int, ...]  # (d0, d1, ..., dL)
+
+    @property
+    def weighted(self) -> bool:
+        return self.aggregator == "wsum"
+
+
+def _relu(x):
+    return jax.nn.relu(x)
+
+
+def _gc_update(p, h_prev, x, *, last: bool):
+    out = x @ p["w"] + p["b"]
+    return out if last else _relu(out)
+
+
+def _sage_update(p, h_prev, x, *, last: bool):
+    out = h_prev @ p["w_self"] + x @ p["w_nbr"] + p["b"]
+    return out if last else _relu(out)
+
+
+def _gin_update(p, h_prev, x, *, last: bool):
+    z = (1.0 + p["eps"]) * h_prev + x
+    out = _relu(z @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+    return out if last else _relu(out)
+
+
+_FAMILY_UPDATE = {"gc": _gc_update, "sage": _sage_update, "gin": _gin_update}
+_FAMILY_SELF_DEP = {"gc": False, "sage": True, "gin": True}
+
+
+@dataclass(frozen=True)
+class Workload:
+    spec: WorkloadSpec
+    family: str
+
+    def init_params(self, key: jax.Array) -> list[dict]:
+        dims = self.spec.dims
+        params = []
+        for l in range(self.spec.n_layers):
+            d_in, d_out = dims[l], dims[l + 1]
+            key, *ks = jax.random.split(key, 6)
+            scale = 1.0 / np.sqrt(d_in)
+            if self.family == "gc":
+                p = {"w": jax.random.normal(ks[0], (d_in, d_out)) * scale,
+                     "b": jnp.zeros((d_out,))}
+            elif self.family == "sage":
+                p = {"w_self": jax.random.normal(ks[0], (d_in, d_out)) * scale,
+                     "w_nbr": jax.random.normal(ks[1], (d_in, d_out)) * scale,
+                     "b": jnp.zeros((d_out,))}
+            elif self.family == "gin":
+                d_hid = d_out
+                p = {"eps": jnp.zeros(()),
+                     "w1": jax.random.normal(ks[0], (d_in, d_hid)) * scale,
+                     "b1": jnp.zeros((d_hid,)),
+                     "w2": jax.random.normal(ks[1], (d_hid, d_out)) * (1.0 / np.sqrt(d_hid)),
+                     "b2": jnp.zeros((d_out,))}
+            else:
+                raise ValueError(self.family)
+            params.append(p)
+        return params
+
+    def update_fn(self, layer: int) -> Callable:
+        last = layer == self.spec.n_layers - 1
+        return partial(_FAMILY_UPDATE[self.family], last=last)
+
+    def normalize(self, S: jax.Array, k: jax.Array) -> jax.Array:
+        """Aggregate normalization x = norm(S, k)."""
+        if self.spec.aggregator == "mean":
+            return S / jnp.maximum(k, 1.0)[:, None]
+        return S
+
+
+def make_workload(name: str, n_layers: int = 2, d_in: int = 32,
+                  d_hidden: int = 32, n_classes: int = 8) -> Workload:
+    """Factory for the paper's 5 workloads: gc-s, gs-s, gc-m, gi-s, gc-w."""
+    name = name.lower()
+    family, agg = {
+        "gc-s": ("gc", "sum"),
+        "gs-s": ("sage", "sum"),
+        "gc-m": ("gc", "mean"),
+        "gi-s": ("gin", "sum"),
+        "gc-w": ("gc", "wsum"),
+    }[name]
+    dims = (d_in,) + (d_hidden,) * (n_layers - 1) + (n_classes,)
+    spec = WorkloadSpec(name=name, aggregator=agg,
+                        self_dependent=_FAMILY_SELF_DEP[family],
+                        n_layers=n_layers, dims=dims)
+    return Workload(spec=spec, family=family)
+
+
+WORKLOAD_NAMES = ("gc-s", "gs-s", "gc-m", "gi-s", "gc-w")

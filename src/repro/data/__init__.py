@@ -1,0 +1,1 @@
+from .streams import UpdateStream, make_stream  # noqa: F401

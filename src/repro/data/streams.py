@@ -1,0 +1,75 @@
+"""Streaming update generation, mirroring the paper's protocol (§7.1.2).
+
+The paper removes a random 10% of edges from each graph to form the initial
+snapshot and streams them back as additions; deletions pick random snapshot
+edges; feature updates pick random vertices; all three kinds are interleaved
+in equal proportion in random order.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.graph import DynamicGraph, EdgeUpdate, FeatureUpdate, UpdateBatch
+
+
+@dataclass
+class UpdateStream:
+    """A pre-generated sequence of updates, sliceable into batches."""
+
+    updates: list  # EdgeUpdate | FeatureUpdate
+
+    def batches(self, batch_size: int):
+        for i in range(0, len(self.updates), batch_size):
+            chunk = self.updates[i : i + batch_size]
+            b = UpdateBatch()
+            for u in chunk:
+                (b.edges if isinstance(u, EdgeUpdate) else b.features).append(u)
+            yield b
+
+    def __len__(self) -> int:
+        return len(self.updates)
+
+
+def snapshot_split(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
+                   holdout_frac: float = 0.1, seed: int = 0):
+    """Split edges into (snapshot, holdout) per the paper's 90/10 protocol."""
+    rng = np.random.default_rng(seed)
+    m = src.shape[0]
+    holdout = rng.random(m) < holdout_frac
+    keep = ~holdout
+    return ((src[keep], dst[keep], w[keep]),
+            (src[holdout], dst[holdout], w[holdout]))
+
+
+def make_stream(graph: DynamicGraph, holdout: tuple[np.ndarray, np.ndarray, np.ndarray],
+                n_updates: int, d_feat: int, seed: int = 0,
+                feature_scale: float = 1.0) -> UpdateStream:
+    """Equal-thirds stream of edge adds / edge deletes / feature updates."""
+    rng = np.random.default_rng(seed)
+    h_src, h_dst, h_w = holdout
+    per_kind = n_updates // 3
+    updates: list = []
+
+    # additions: stream back held-out edges
+    n_add = min(per_kind, h_src.shape[0])
+    for i in range(n_add):
+        updates.append(EdgeUpdate(int(h_src[i]), int(h_dst[i]), True, float(h_w[i])))
+
+    # deletions: random existing snapshot edges
+    s_src, s_dst, _ = graph.coo()
+    n_del = min(per_kind, s_src.shape[0])
+    idx = rng.choice(s_src.shape[0], size=n_del, replace=False)
+    for i in idx:
+        updates.append(EdgeUpdate(int(s_src[i]), int(s_dst[i]), False))
+
+    # vertex feature updates
+    n_feat = n_updates - n_add - n_del
+    vs = rng.integers(0, graph.n, size=n_feat)
+    for v in vs:
+        updates.append(FeatureUpdate(int(v),
+                                     rng.normal(0, feature_scale, size=d_feat).astype(np.float32)))
+
+    rng.shuffle(updates)
+    return UpdateStream(updates=updates)

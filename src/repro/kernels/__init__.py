@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot-spots:
+#   segment_mm     — block-sparse (BSR) message-passing SpMM on the MXU
+#   delta_apply    — fused RIPPLE mailbox-apply + UPDATE matmul + activation
+#   embedding_bag  — DLRM multi-hot gather-reduce with scalar-prefetch
+#   flash_attention— causal online-softmax attention with GQA
+# Each ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper
+# with interpret fallback on CPU), ref.py (pure-jnp oracle).

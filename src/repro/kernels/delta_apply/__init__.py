@@ -1,0 +1,1 @@
+from .ops import delta_apply  # noqa: F401

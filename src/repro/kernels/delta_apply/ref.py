@@ -1,0 +1,12 @@
+"""Oracle for the fused RIPPLE apply: S' = S + M; h = act(S'/k @ W + b)."""
+import jax
+import jax.numpy as jnp
+
+
+def delta_apply_ref(S, mailbox, k, W, b, *, mean: bool, relu: bool):
+    S_new = S + mailbox
+    x = S_new / jnp.maximum(k, 1.0)[:, None] if mean else S_new
+    h = x @ W + b
+    if relu:
+        h = jax.nn.relu(h)
+    return S_new, h

@@ -1,0 +1,1 @@
+from .ops import embedding_bag_kernel  # noqa: F401

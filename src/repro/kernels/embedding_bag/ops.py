@@ -1,0 +1,12 @@
+"""jit wrapper around the Pallas EmbeddingBag."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import embedding_bag_pallas
+
+
+def embedding_bag_kernel(table: jax.Array, idx: jax.Array,
+                         interpret: bool = True) -> jax.Array:
+    """Drop-in for models.recsys.dlrm.embedding_bag."""
+    return embedding_bag_pallas(idx, table, interpret=interpret)

@@ -1,0 +1,7 @@
+"""Oracle: sum-mode EmbeddingBag (torch nn.EmbeddingBag semantics)."""
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, idx):
+    """table [V, d]; idx [B, hot] -> [B, d] (sum over the bag)."""
+    return jnp.take(table, idx, axis=0).sum(axis=1)

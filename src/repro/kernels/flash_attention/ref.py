@@ -1,0 +1,19 @@
+"""Oracle: exact causal GQA attention (fp32 softmax)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v):
+    """q [B,S,H,Dh]; k/v [B,S,Hkv,Dh] -> [B,S,H,Dh], causal."""
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, S, Hkv, rep, Dh)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(Dh)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bhrqk,bkhd->bqhrd", p, v)
+    return ctx.reshape(B, S, H, Dh)

@@ -1,0 +1,1 @@
+from .ops import segment_mm, coo_to_bsr  # noqa: F401

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for message-passing SpMM: out[v] = sum_e w_e * x[src_e]."""
+import jax
+import jax.numpy as jnp
+
+
+def segment_mm_ref(src, dst, w, x, n: int):
+    msgs = jnp.take(x, src, axis=0) * w[:, None]
+    return jax.ops.segment_sum(msgs, dst, num_segments=n)

@@ -1,0 +1,54 @@
+"""Serving driver: prefill + batched decode on a reduced LM config.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b --tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.models.lm.model import init_params
+from repro.models.lm.steps import make_decode_step, make_prefill_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4-mini-3.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).REDUCED
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    max_seq = args.prompt_len + args.tokens
+    prefill = jax.jit(make_prefill_step(cfg, max_seq=max_seq))
+    decode = jax.jit(make_decode_step(cfg))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab,
+                                       size=(args.batch, args.prompt_len)),
+                          jnp.int32)
+    t0 = time.perf_counter()
+    logits, caches = prefill(params, prompts)
+    last = jnp.argmax(logits[:, -1], -1)
+    out = [last]
+    for i in range(args.tokens - 1):
+        lg, caches = decode(params, caches, last,
+                            jnp.asarray(args.prompt_len + i, jnp.int32))
+        last = jnp.argmax(lg, -1)
+        out.append(last)
+    toks = jnp.stack(out, axis=1)
+    dt = time.perf_counter() - t0
+    print(f"{cfg.name}: generated {toks.shape} in {dt:.2f}s "
+          f"({args.batch * args.tokens / dt:.1f} tok/s incl. compile)")
+    print("sample:", np.asarray(toks[0][:12]))
+
+
+if __name__ == "__main__":
+    main()

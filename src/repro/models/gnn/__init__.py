@@ -1,0 +1,1 @@
+from .common import GraphBatch  # noqa: F401

@@ -1,0 +1,111 @@
+"""Shared GNN plumbing: graph batch container, segment message passing,
+radial bases.  JAX has no CSR SpMM — message passing IS
+``jnp.take`` + ``jax.ops.segment_sum`` over an edge index (system prompt /
+kernel_taxonomy §GNN); the Pallas ``segment_mm`` kernel accelerates the same
+contract on TPU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class GraphBatch(NamedTuple):
+    """Padded, static-shape graph batch.
+
+    Invalid (padding) edges carry ``src = dst = n_nodes - 1`` and
+    ``edge_mask = 0`` so gathers stay in-bounds and scatters contribute 0.
+    """
+
+    node_feat: jax.Array          # [n, d] (float)
+    src: jax.Array                # [m] int32
+    dst: jax.Array                # [m] int32
+    edge_mask: jax.Array          # [m] float (1 = real edge)
+    positions: jax.Array | None = None   # [n, 3] molecular coords
+    graph_id: jax.Array | None = None    # [n] for batched small graphs
+
+
+def scatter_sum(values: jax.Array, dst: jax.Array, n: int) -> jax.Array:
+    return jax.ops.segment_sum(values, dst, num_segments=n)
+
+
+def scatter_mean(values: jax.Array, dst: jax.Array, n: int,
+                 mask: jax.Array) -> jax.Array:
+    s = scatter_sum(values * mask[:, None], dst, n)
+    cnt = scatter_sum(mask[:, None], dst, n)
+    return s / jnp.maximum(cnt, 1.0)
+
+
+def scatter_max(values: jax.Array, dst: jax.Array, n: int,
+                mask: jax.Array, neutral: float = -1e30) -> jax.Array:
+    v = jnp.where(mask[:, None] > 0, values, neutral)
+    out = jax.ops.segment_max(v, dst, num_segments=n)
+    return jnp.where(out <= neutral / 2, 0.0, out)
+
+
+def scatter_min(values, dst, n, mask):
+    return -scatter_max(-values, dst, n, mask)
+
+
+def in_degree(dst: jax.Array, mask: jax.Array, n: int) -> jax.Array:
+    return jax.ops.segment_sum(mask, dst, num_segments=n)
+
+
+def mlp(params: list[dict], x: jax.Array, act=jax.nn.silu) -> jax.Array:
+    for i, p in enumerate(params):
+        x = x @ p["w"] + p["b"]
+        if i < len(params) - 1:
+            x = act(x)
+    return x
+
+
+def init_mlp(key, dims: list[int], dtype=jnp.float32) -> list[dict]:
+    params = []
+    for i in range(len(dims) - 1):
+        key, k = jax.random.split(key)
+        scale = 1.0 / np.sqrt(dims[i])
+        params.append({
+            "w": (jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32)
+                  * scale).astype(dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype)})
+    return params
+
+
+# ---------------------------------------------------------------------------
+# radial bases
+# ---------------------------------------------------------------------------
+def gaussian_rbf(d: jax.Array, n_rbf: int, cutoff: float) -> jax.Array:
+    """SchNet's Gaussian radial basis. d [m] -> [m, n_rbf]."""
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = 1.0 / (centers[1] - centers[0]) ** 2
+    return jnp.exp(-gamma * (d[:, None] - centers[None, :]) ** 2)
+
+
+def bessel_rbf(d: jax.Array, n_rbf: int, cutoff: float) -> jax.Array:
+    """DimeNet/NequIP Bessel basis: sqrt(2/c) sin(n pi d / c) / d."""
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    dd = jnp.maximum(d, 1e-6)[:, None]
+    return jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * dd / cutoff) / dd
+
+
+def cosine_cutoff(d: jax.Array, cutoff: float) -> jax.Array:
+    return jnp.where(d < cutoff, 0.5 * (jnp.cos(jnp.pi * d / cutoff) + 1.0), 0.0)
+
+
+def polynomial_envelope(d: jax.Array, cutoff: float, p: int = 6) -> jax.Array:
+    """DimeNet envelope u(d) (arXiv:2003.03123 eq. 8)."""
+    x = jnp.clip(d / cutoff, 0.0, 1.0)
+    a = -(p + 1) * (p + 2) / 2.0
+    b = p * (p + 2.0)
+    c = -p * (p + 1) / 2.0
+    return 1.0 + a * x ** p + b * x ** (p + 1) + c * x ** (p + 2)
+
+
+def edge_vectors(positions: jax.Array, src: jax.Array, dst: jax.Array):
+    """Returns (unit vec [m,3], dist [m]) with safe normalization."""
+    vec = positions[src] - positions[dst]
+    d = jnp.sqrt(jnp.sum(vec * vec, axis=-1) + 1e-12)
+    return vec / d[:, None], d

@@ -1,0 +1,56 @@
+"""PNA — Principal Neighbourhood Aggregation (arXiv:2004.05718).
+
+4 aggregators (mean/max/min/std) x 3 degree scalers (identity,
+amplification, attenuation) concatenated -> linear tower.
+
+RIPPLE applicability (beyond-paper, DESIGN.md §4): mean and std are
+maintained incrementally from running moments (S1=Σh, S2=Σh², k); max/min
+are non-linear and fall back to recompute-on-invalidate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import (GraphBatch, in_degree, init_mlp, mlp, scatter_max,
+                     scatter_mean, scatter_min, scatter_sum)
+
+N_AGG, N_SCALER = 4, 3
+
+
+def init_pna(key, *, d_in: int, d_hidden: int = 75, n_layers: int = 4,
+             d_out: int = 1, avg_log_deg: float = 2.0):
+    ks = jax.random.split(key, n_layers + 2)
+    params = {
+        "embed": init_mlp(ks[0], [d_in, d_hidden]),
+        "layers": [],
+        "out": init_mlp(ks[-1], [d_hidden, d_hidden, d_out]),
+    }
+    for i in range(n_layers):
+        k1, k2 = jax.random.split(ks[1 + i])
+        params["layers"].append({
+            "pre": init_mlp(k1, [2 * d_hidden, d_hidden]),       # msg MLP
+            "post": init_mlp(k2, [N_AGG * N_SCALER * d_hidden + d_hidden,
+                                  d_hidden]),
+        })
+    return params
+
+
+def pna_forward(params, g: GraphBatch, *, delta: float = 2.0) -> jax.Array:
+    n = g.node_feat.shape[0]
+    h = mlp(params["embed"], g.node_feat)
+    deg = in_degree(g.dst, g.edge_mask, n)
+    logd = jnp.log1p(deg)[:, None]
+    scalers = (jnp.ones_like(logd), logd / delta,
+               delta / jnp.maximum(logd, 1e-6))
+    for lay in params["layers"]:
+        msgs = mlp(lay["pre"], jnp.concatenate([h[g.dst], h[g.src]], -1))
+        mean = scatter_mean(msgs, g.dst, n, g.edge_mask)
+        mx = scatter_max(msgs, g.dst, n, g.edge_mask)
+        mn = scatter_min(msgs, g.dst, n, g.edge_mask)
+        sq = scatter_mean(msgs * msgs, g.dst, n, g.edge_mask)
+        std = jnp.sqrt(jnp.maximum(sq - mean * mean, 0.0) + 1e-5)
+        aggs = [mean, mx, mn, std]
+        combo = jnp.concatenate([a * s for s in scalers for a in aggs], -1)
+        h = h + mlp(lay["post"], jnp.concatenate([combo, h], -1))
+    return mlp(params["out"], h)

@@ -1,0 +1,1 @@
+from .config import LMConfig  # noqa: F401

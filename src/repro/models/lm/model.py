@@ -1,0 +1,548 @@
+"""Transformer LM in pure JAX: GQA / MLA attention, dense / MoE FFN,
+layer-scanned blocks, memory-safe chunked causal attention, KV-cache decode.
+
+Design notes (TPU-native, DESIGN.md §5):
+ - Layers are scanned (params stacked on a leading L axis) to keep HLO small
+   at 61 layers and let remat policies apply uniformly.
+ - Attention never materializes the full [S, S] score matrix: queries are
+   processed in chunks of ``cfg.attn_chunk`` against the full KV with causal
+   masking (baseline), or against only the causal prefix with unrolled
+   static slices when ``cfg.causal_unroll`` (the exact-FLOPs perf variant —
+   see EXPERIMENTS.md §Perf).
+ - MLA decode uses the *absorbed* formulation: scores are taken directly in
+   the compressed-KV latent space, so the cache stores only
+   (kv_lora_rank + qk_rope_head_dim) per token.
+ - MoE uses GShard capacity-based dispatch einsums (expert-parallel over the
+   ``model`` mesh axis), with load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import LMConfig
+
+Params = Any
+
+# ---------------------------------------------------------------------------
+# activation-sharding context: cell builders set this so that
+# with_sharding_constraint pins the batch axis after ops (embedding gather)
+# where GSPMD propagation would otherwise pick the operand's sharding and
+# silently replicate the batch (seen as 100s of GiB/device in the dry-run).
+# ---------------------------------------------------------------------------
+_ACT_SHARDING: list = [None]  # (mesh, dp_axes) | None
+
+
+class activation_sharding:
+    def __init__(self, mesh, dp_axes):
+        self.ctx = (mesh, dp_axes)
+
+    def __enter__(self):
+        _ACT_SHARDING[0] = self.ctx
+
+    def __exit__(self, *exc):
+        _ACT_SHARDING[0] = None
+
+
+def _wsc_batch(x: jax.Array) -> jax.Array:
+    """Constrain dim0 (batch) to the dp axes if divisible."""
+    if _ACT_SHARDING[0] is None:
+        return x
+    mesh, dp = _ACT_SHARDING[0]
+    axes = dp if isinstance(dp, tuple) else (dp,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if x.shape[0] % size != 0:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = P(dp, *(None,) * (x.ndim - 1))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _dtype(cfg: LMConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _cdtype(cfg: LMConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(d: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Half-rotation RoPE.  x [..., S, H, D], positions [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # [D/2]
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,S,1,D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _act(name: str, x: jax.Array, gate: jax.Array | None = None) -> jax.Array:
+    if name == "swiglu":
+        return jax.nn.silu(gate) * x
+    if name == "squared_relu":
+        r = jax.nn.relu(x)
+        return r * r
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+def _norm_init(key, d, dtype):
+    return jnp.ones((d,), dtype=dtype)
+
+
+def _dense(key, shape, dtype, scale=None):
+    scale = scale or (1.0 / np.sqrt(shape[0]))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_attn(key, cfg: LMConfig) -> dict:
+    dt = _dtype(cfg)
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    if cfg.attention == "mla":
+        m = cfg.mla
+        qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+        return {
+            "w_dq": _dense(ks[0], (D, m.q_lora_rank), dt),
+            "q_norm": _norm_init(ks[1], m.q_lora_rank, dt),
+            "w_uq": _dense(ks[2], (m.q_lora_rank, H, qk_dim), dt),
+            "w_dkv": _dense(ks[3], (D, m.kv_lora_rank + m.qk_rope_head_dim), dt),
+            "kv_norm": _norm_init(ks[4], m.kv_lora_rank, dt),
+            "w_uk": _dense(ks[5], (m.kv_lora_rank, H, m.qk_nope_head_dim), dt),
+            "w_uv": _dense(ks[6], (m.kv_lora_rank, H, m.v_head_dim), dt),
+            "w_o": _dense(ks[7], (H, m.v_head_dim, D), dt, 1.0 / np.sqrt(D)),
+        }
+    p = {
+        "w_q": _dense(ks[0], (D, H, Dh), dt),
+        "w_k": _dense(ks[1], (D, Hkv, Dh), dt),
+        "w_v": _dense(ks[2], (D, Hkv, Dh), dt),
+        "w_o": _dense(ks[3], (H, Dh, D), dt, 1.0 / np.sqrt(D)),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((H, Dh), dt)
+        p["b_k"] = jnp.zeros((Hkv, Dh), dt)
+        p["b_v"] = jnp.zeros((Hkv, Dh), dt)
+    return p
+
+
+def init_ffn(key, cfg: LMConfig, d_ff: int) -> dict:
+    dt = _dtype(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "swiglu":
+        return {"w_gate": _dense(ks[0], (D, d_ff), dt),
+                "w_up": _dense(ks[1], (D, d_ff), dt),
+                "w_down": _dense(ks[2], (d_ff, D), dt)}
+    return {"w_in": _dense(ks[0], (D, d_ff), dt),
+            "w_out": _dense(ks[1], (d_ff, D), dt)}
+
+
+def init_moe(key, cfg: LMConfig) -> dict:
+    m = cfg.moe
+    dt = _dtype(cfg)
+    D, E, F = cfg.d_model, m.n_experts, m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {"router": _dense(ks[0], (D, E), jnp.float32)}
+    if cfg.activation == "swiglu":
+        p["w_gate"] = _dense(ks[1], (E, D, F), dt)
+        p["w_up"] = _dense(ks[2], (E, D, F), dt)
+        p["w_down"] = _dense(ks[3], (E, F, D), dt)
+    else:
+        p["w_in"] = _dense(ks[1], (E, D, F), dt)
+        p["w_out"] = _dense(ks[2], (E, F, D), dt)
+    if m.n_shared:
+        p["shared"] = init_ffn(ks[4], cfg, m.d_ff_expert * m.n_shared)
+    return p
+
+
+def init_block(key, cfg: LMConfig, moe: bool) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": _norm_init(ks[0], cfg.d_model, _dtype(cfg)),
+        "attn": init_attn(ks[1], cfg),
+        "ln2": _norm_init(ks[2], cfg.d_model, _dtype(cfg)),
+        "mlp": init_moe(ks[3], cfg) if moe else init_ffn(ks[3], cfg, cfg.d_ff),
+    }
+
+
+def init_params(key, cfg: LMConfig) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    n_dense, n_moe = _layer_split(cfg)
+    params: dict = {
+        "embed": _dense(ks[0], (cfg.vocab, cfg.d_model), dt, 1.0),
+        "ln_f": _norm_init(ks[1], cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense(ks[2], (cfg.d_model, cfg.vocab), dt)
+    if n_dense:
+        params["dense_blocks"] = jax.vmap(
+            lambda k: init_block(k, cfg, moe=False))(
+                jax.random.split(ks[3], n_dense))
+    if n_moe:
+        params["moe_blocks"] = jax.vmap(
+            lambda k: init_block(k, cfg, moe=True))(
+                jax.random.split(ks[4], n_moe))
+    if cfg.mtp_depth:
+        params["mtp"] = {
+            "proj": _dense(ks[5], (2 * cfg.d_model, cfg.d_model), dt),
+            "block": init_block(ks[6], cfg, moe=False),
+            "ln": _norm_init(ks[7], cfg.d_model, dt),
+        }
+    return params
+
+
+def _layer_split(cfg: LMConfig) -> tuple[int, int]:
+    """(# dense layers, # MoE layers)."""
+    if cfg.moe is None:
+        return cfg.n_layers, 0
+    k = cfg.moe.first_k_dense
+    return k, cfg.n_layers - k
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def _gqa_scores_ctx(q, k, v, mask, scale):
+    """q [B,Sq,H,Dh] grouped against k/v [B,Skv,Hkv,Dh]; mask [Sq,Skv]."""
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, rep, Dh)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bhrqk,bkhd->bqhrd", p, v)
+    return ctx.reshape(B, Sq, H, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def causal_attention(q, k, v, cfg: LMConfig, q_offset: int = 0):
+    """Chunked causal attention; never materializes [S, S] scores.
+
+    q [B,S,H,Dh]; k/v [B,Skv,Hkv,Dh].  q position i attends kv positions
+    <= q_offset + i.
+    """
+    B, S, H, Dh = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / np.sqrt(Dh)
+    chunk = min(cfg.attn_chunk, S)
+    n_chunks = (S + chunk - 1) // chunk
+    if n_chunks * chunk != S:  # pad to whole chunks
+        pad = n_chunks * chunk - S
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    kv_pos = jnp.arange(Skv)
+
+    if cfg.causal_unroll:
+        # exact-FLOPs variant: q-chunk i only reads the causal KV prefix
+        outs = []
+        for i in range(n_chunks):
+            qi = q[:, i * chunk:(i + 1) * chunk]
+            hi = min(q_offset + (i + 1) * chunk, Skv)
+            ki, vi = k[:, :hi], v[:, :hi]
+            qpos = q_offset + i * chunk + jnp.arange(chunk)
+            mask = kv_pos[None, :hi] <= qpos[:, None]
+            outs.append(_gqa_scores_ctx(qi, ki, vi, mask, scale))
+        out = jnp.concatenate(outs, axis=1)
+        return out[:, :S]
+
+    @jax.checkpoint  # flash-style: recompute chunk scores in backward so the
+    def one_chunk(i):  # peak stays ONE chunk, not n_chunks stacked residuals
+        qi = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        qpos = q_offset + i * chunk + jnp.arange(chunk)
+        mask = kv_pos[None, :] <= qpos[:, None]
+        return _gqa_scores_ctx(qi, k, v, mask, scale)
+
+    out = jax.lax.map(one_chunk, jnp.arange(n_chunks))   # [n,B,chunk,H,Dv]
+    out = jnp.moveaxis(out, 0, 1).reshape(B, n_chunks * chunk, H, v.shape[-1])
+    return out[:, :S]
+
+
+def gqa_attend(p, cfg: LMConfig, x, positions, *, cache=None, layer=None):
+    """Returns (out [B,S,D], new_cache_kv or None)."""
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["w_v"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        ctx = causal_attention(q, k, v, cfg)
+        new_kv = (k, v)  # exposed so prefill fills the cache in ONE pass
+    else:
+        ck, cv, pos = cache  # ck/cv [B,Smax,Hkv,Dh]; pos scalar
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), pos, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), pos, 1)
+        mask = jnp.arange(ck.shape[1])[None, :] <= (pos + jnp.arange(S))[:, None]
+        ctx = _gqa_scores_ctx(q, ck, cv, mask, 1.0 / np.sqrt(cfg.head_dim))
+        new_kv = (ck, cv)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["w_o"])
+    return out, new_kv
+
+
+def mla_attend(p, cfg: LMConfig, x, positions, *, cache=None, layer=None):
+    """Multi-head Latent Attention (deepseek-v3).
+
+    Prefill/train: expand compressed KV per head.  Decode: absorbed scores in
+    latent space — the cache holds only [c_kv (r), k_pe (dr)] per token.
+    """
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv, r = (m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim,
+                     m.kv_lora_rank)
+    scale = 1.0 / np.sqrt(dn + dr)
+
+    cq = rms_norm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)    # [B,S,rq]
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])             # [B,S,H,dn+dr]
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    dkv = x @ p["w_dkv"]                                       # [B,S,r+dr]
+    c_kv = rms_norm(dkv[..., :r], p["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope(dkv[..., None, r:], positions, cfg.rope_theta)  # [B,S,1,dr]
+
+    if cache is None:
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+        v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (B, S, H, dr))],
+                            axis=-1)
+        qq = jnp.concatenate([q_nope, q_pe], axis=-1)
+        ctx = causal_attention(qq, k, v, cfg)                  # [B,S,H,dv]
+        new_kv = (c_kv, k_pe[:, :, 0])  # compressed cache entries
+    else:
+        cc, cpe, pos = cache   # cc [B,Smax,r], cpe [B,Smax,dr]
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            cc, c_kv.astype(cc.dtype), pos, 1)
+        cpe = jax.lax.dynamic_update_slice_in_dim(
+            cpe, k_pe[:, :, 0].astype(cpe.dtype), pos, 1)
+        # absorbed: q_abs[h] = q_nope[h] @ W_uk[h]  -> latent space
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+        s_lat = jnp.einsum("bshr,btr->bhst", q_abs, cc)
+        s_pe = jnp.einsum("bshk,btk->bhst", q_pe, cpe)
+        scores = (s_lat + s_pe).astype(jnp.float32) * scale
+        mask = (jnp.arange(cc.shape[1])[None, :]
+                <= (pos + jnp.arange(S))[:, None])[None, None]
+        scores = jnp.where(mask, scores, -1e30)
+        pr = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        ctx_lat = jnp.einsum("bhst,btr->bshr", pr, cc)
+        ctx = jnp.einsum("bshr,rhk->bshk", ctx_lat, p["w_uv"])  # [B,S,H,dv]
+        new_kv = (cc, cpe)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["w_o"])
+    return out, new_kv
+
+
+# ---------------------------------------------------------------------------
+# FFN / MoE
+# ---------------------------------------------------------------------------
+def dense_ffn(p, cfg: LMConfig, x):
+    if cfg.activation == "swiglu":
+        return _act("swiglu", x @ p["w_up"], x @ p["w_gate"]) @ p["w_down"]
+    return _act(cfg.activation, x @ p["w_in"]) @ p["w_out"]
+
+
+def moe_ffn(p, cfg: LMConfig, x):
+    """GShard capacity-based MoE.  x [B,S,D] -> (y, aux_loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+    C = int(np.ceil(S * K / E * m.capacity_factor / 4.0) * 4)
+    C = min(C, S)
+
+    logits = (x.astype(jnp.float32) @ p["router"])            # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)                  # [B,S,K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)        # [B,S,K,E]
+    # position of each assignment within its expert (flatten S,K per group)
+    flat = onehot.reshape(B, S * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                     # [B,S*K,E]
+    pos = (pos * flat).sum(-1).reshape(B, S, K)               # [B,S,K]
+    keep = pos < C
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+    # dispatch [B,S,E,C]
+    dispatch = jnp.einsum("bske,bskc->bsec", onehot, pos_oh)
+    combine = jnp.einsum("bske,bskc,bsk->bsec", onehot, pos_oh, gate_vals)
+
+    xe = jnp.einsum("bsec,bsd->ebcd", dispatch.astype(x.dtype), x)  # [E,B,C,D]
+    if cfg.serving_shardings and _ACT_SHARDING[0] is not None:
+        # pin the dispatched tokens to the expert-parallel layout so GSPMD
+        # routes ACTIVATIONS to the (data x model)-sharded expert weights
+        # instead of all-gathering the weights (EXPERIMENTS.md §Perf B2)
+        mesh, _ = _ACT_SHARDING[0]
+        ep = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+        ep = tuple(a for a in ep if a != "pod") or ep
+        if xe.shape[0] % (mesh.shape["data"] * mesh.shape["model"]) == 0:
+            from jax.sharding import NamedSharding, PartitionSpec as Ps
+            xe = jax.lax.with_sharding_constraint(
+                xe, NamedSharding(mesh, Ps(("data", "model"), None, None, None)))
+    if cfg.activation == "swiglu":
+        h = _act("swiglu", jnp.einsum("ebcd,edf->ebcf", xe, p["w_up"]),
+                 jnp.einsum("ebcd,edf->ebcf", xe, p["w_gate"]))
+    else:
+        h = _act(cfg.activation, jnp.einsum("ebcd,edf->ebcf", xe, p["w_in"]))
+    w_down = p["w_down"] if cfg.activation == "swiglu" else p["w_out"]
+    ye = jnp.einsum("ebcf,efd->ebcd", h, w_down)
+    y = jnp.einsum("bsec,ebcd->bsd", combine.astype(x.dtype), ye)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    f = onehot.mean(axis=(0, 1, 2)) * K                       # fraction per e
+    pmean = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(f * pmean) / K
+
+    if m.n_shared:
+        y = y + dense_ffn(p["shared"], cfg, x)
+    return y, aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# blocks & model
+# ---------------------------------------------------------------------------
+def block_fn(p, cfg: LMConfig, moe: bool, x, positions, cache=None):
+    attend = mla_attend if cfg.attention == "mla" else gqa_attend
+    a, new_kv = attend(p["attn"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps),
+                       positions, cache=cache)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if moe:
+        f, aux = moe_ffn(p["mlp"], cfg, h)
+    else:
+        f, aux = dense_ffn(p["mlp"], cfg, h), jnp.zeros((), jnp.float32)
+    return x + f, aux, new_kv
+
+
+def _remat_wrap(cfg: LMConfig, fn):
+    if cfg.remat_policy == "nothing":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def forward(params: Params, cfg: LMConfig, tokens: jax.Array,
+            *, caches=None, positions=None):
+    """tokens [B,S] -> (hidden [B,S,D], aux_loss, new_caches).
+
+    caches: None for train/prefill-less, else per-stack KV caches (decode).
+    """
+    B, S = tokens.shape
+    x = _wsc_batch(params["embed"][tokens].astype(_cdtype(cfg)))
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {}
+
+    n_dense, n_moe = _layer_split(cfg)
+    for stack, moe in (("dense_blocks", False), ("moe_blocks", True)):
+        if stack not in params:
+            continue
+        stacked = params[stack]
+
+        if caches is None:
+            def body(carry, layer_p, moe=moe):
+                h, aux = carry
+                h2, a, kv = _remat_wrap(cfg, partial(block_fn, cfg=cfg, moe=moe))(
+                    layer_p, x=h, positions=positions)
+                return (h2, aux + a), kv
+
+            # per-layer K/V are emitted as scan ys: prefill packs them into
+            # the decode cache; train ignores them (XLA DCE removes the cost)
+            (x, aux_total), kvs = jax.lax.scan(
+                body, (x, aux_total), stacked,
+                unroll=stacked["ln1"].shape[0] if cfg.scan_unroll else 1)
+            new_caches[stack] = kvs
+        else:
+            ck, cv, pos = caches[stack]
+
+            def body(carry, inp, moe=moe):
+                h, aux = carry
+                layer_p, k_l, v_l = inp
+                h2, a, new_kv = block_fn(layer_p, cfg, moe, h, positions,
+                                         cache=(k_l, v_l, pos))
+                return (h2, aux + a), new_kv
+
+            (x, aux_total), kv = jax.lax.scan(
+                body, (x, aux_total), (stacked, ck, cv),
+                unroll=stacked["ln1"].shape[0] if cfg.scan_unroll else 1)
+            new_caches[stack] = (kv[0], kv[1], pos)
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, aux_total, new_caches
+
+
+def logits_fn(params: Params, cfg: LMConfig, hidden: jax.Array) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return hidden @ head
+
+
+def mtp_head(params: Params, cfg: LMConfig, hidden, tokens):
+    """DeepSeek-V3 depth-1 multi-token prediction: predict t+2 from
+    (h_t, emb(token_{t+1}))."""
+    p = params["mtp"]
+    emb_next = params["embed"][tokens[:, 1:]].astype(hidden.dtype)  # [B,S-1,D]
+    h = jnp.concatenate([hidden[:, :-1], emb_next], axis=-1) @ p["proj"]
+    B, Sm1, D = h.shape
+    pos = jnp.broadcast_to(jnp.arange(Sm1), (B, Sm1))
+    h, _, _ = block_fn(p["block"], cfg, False, h, pos)
+    h = rms_norm(h, p["ln"], cfg.norm_eps)
+    return logits_fn(params, cfg, h)   # predicts tokens[:, 2:] shifted
+
+
+# ---------------------------------------------------------------------------
+# KV cache plumbing
+# ---------------------------------------------------------------------------
+class DecodeCache(NamedTuple):
+    stacks: dict      # stack name -> (k [L,B,Smax,...], v [...], pos scalar)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    dt = dtype or _dtype(cfg)
+    n_dense, n_moe = _layer_split(cfg)
+    caches = {}
+    for name, L in (("dense_blocks", n_dense), ("moe_blocks", n_moe)):
+        if L == 0:
+            continue
+        if cfg.attention == "mla":
+            m = cfg.mla
+            k = jnp.zeros((L, batch, max_seq, m.kv_lora_rank), dt)
+            v = jnp.zeros((L, batch, max_seq, m.qk_rope_head_dim), dt)
+        else:
+            k = jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dt)
+            v = jnp.zeros_like(k)
+        caches[name] = (k, v, jnp.zeros((), jnp.int32))
+    return caches
+
+
+def set_cache_pos(caches: dict, pos) -> dict:
+    return {k: (v[0], v[1], jnp.asarray(pos, jnp.int32))
+            for k, v in caches.items()}

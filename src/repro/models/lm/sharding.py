@@ -1,0 +1,154 @@
+"""Parameter/activation/cache partition rules for the (pod, data, model) mesh.
+
+Strategy (DESIGN.md §5): FSDP shards parameter d_model/d_ff rows over
+``data``; TP shards heads / ff-columns / experts over ``model``; the batch
+is data-parallel over (pod, data); pods replicate parameters (gradient
+all-reduce crosses pods once per step).  Decode caches shard batch over dp
+and sequence over ``model`` (sequence-parallel attention) so multi-GiB KV
+caches fit per-chip HBM.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import LMConfig
+from .model import init_params
+
+
+def dp_axes(mesh) -> Any:
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _leaf_rule(path: tuple[str, ...], ndim: int) -> P:
+    name = path[-1]
+    stacked = any(s in ("dense_blocks", "moe_blocks") for s in path)
+    inner_moe = "mlp" in path and any("moe" in s for s in path) \
+        and "shared" not in path
+
+    def spec(*dims):
+        return P(*((None,) + dims if stacked else dims))
+
+    if name in ("ln1", "ln2", "ln_f", "ln", "q_norm", "kv_norm", "b"):
+        return spec(None)
+    if name == "embed":
+        return P("model", "data")
+    if name == "lm_head":
+        return P("data", "model")
+    if name in ("w_q", "w_k", "w_v"):
+        return spec("data", "model", None)
+    if name in ("b_q", "b_k", "b_v"):
+        return spec("model", None)
+    if name == "w_o":
+        return spec("model", None, "data")
+    if name in ("w_dq", "w_dkv"):
+        return spec("data", None)
+    if name in ("w_uq", "w_uk", "w_uv"):
+        return spec(None, "model", None)
+    if name == "router":
+        return spec("data", None)
+    if name in ("w_gate", "w_up", "w_in"):
+        if inner_moe and ndim - (1 if stacked else 0) == 3:  # [E, D, F]
+            return spec("model", "data", None)
+        return spec("data", "model")
+    if name in ("w_down", "w_out"):
+        if inner_moe and ndim - (1 if stacked else 0) == 3:  # [E, F, D]
+            return spec("model", None, "data")
+        return spec("model", "data")
+    if name == "proj":  # mtp
+        return spec("data", None)
+    if name == "eps":
+        return spec()
+    # fallback: replicate
+    return P(*(None,) * ndim)
+
+
+def param_specs(cfg: LMConfig):
+    """PartitionSpec pytree matching init_params(cfg).
+
+    serving_shardings (decode): there is no optimizer state, so FSDP's
+    per-step parameter all-gather over `data` is pure waste (measured
+    ~100 GiB/chip/step for deepseek decode — EXPERIMENTS.md §Perf).
+    Non-expert params shard over `model` only (replicated over data);
+    MoE experts go fully expert-parallel over (data x model) so weights
+    stay put and only (tiny) activations move.
+    """
+    abstract = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+    def rule(path, leaf):
+        names = tuple(getattr(p, "key", getattr(p, "name", str(p)))
+                      for p in path)
+        spec = _leaf_rule(names, leaf.ndim)
+        if cfg.serving_shardings:
+            ent = list(tuple(spec))
+            inner_moe = "mlp" in names and any("moe" in s for s in names) \
+                and "shared" not in names
+            expert_mat = (inner_moe and names[-1] in
+                          ("w_gate", "w_up", "w_in", "w_down", "w_out")
+                          and leaf.ndim >= 3)
+            if expert_mat:
+                # stacked [L, E, ., .]: expert dim over (data, model) —
+                # weights stay put, only routed activations move
+                ent = [None] * leaf.ndim
+                ent[1 if leaf.ndim == 4 else 0] = ("data", "model")
+                return P(*ent)
+            return P(*[None if e == "data"
+                       else (tuple(a for a in e if a != "data") or None)
+                       if isinstance(e, tuple) else e
+                       for e in ent])
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, abstract)
+
+
+def opt_state_specs(params_spec, opt_name: str, params_abstract):
+    """Specs for optimizer state mirroring the param layout."""
+    if opt_name == "adamw":
+        from repro.train.optim import AdamWState
+        return AdamWState(step=P(), mu=params_spec,
+                          nu=jax.tree.map(lambda s: s, params_spec))
+    from repro.train.optim import AdafactorState
+
+    def vr_spec(s, p):
+        return P(*s[:-1]) if p.ndim >= 2 else s
+
+    def vc_spec(s, p):
+        return P(*(s[:-2] + (s[-1],))) if p.ndim >= 2 else P(None)
+
+    return AdafactorState(
+        step=P(),
+        vr=jax.tree.map(vr_spec, params_spec, params_abstract),
+        vc=jax.tree.map(vc_spec, params_spec, params_abstract))
+
+
+def cache_specs(cfg: LMConfig, batch: int, mesh):
+    """Decode-cache specs: batch over dp when divisible, sequence over model
+    (sequence-parallel attention); small batches shard sequence over all."""
+    dp = dp_axes(mesh)
+    dp_size = (mesh.shape["pod"] * mesh.shape["data"] if "pod" in mesh.axis_names
+               else mesh.shape["data"])
+    if batch % dp_size == 0 and batch >= dp_size:
+        b_ax, s_ax = dp, "model"
+    else:
+        b_ax, s_ax = None, (("pod", "data", "model")
+                            if "pod" in mesh.axis_names else ("data", "model"))
+    if cfg.attention == "mla" and cfg.cache_latent_tp:
+        # latent-TP: c_kv's rank dim over model; k_pe (64) replicated.
+        # dynamic_update_slice then writes a LOCAL slice (no resharding).
+        kv = (P(None, b_ax, None, "model"), P(None, b_ax, None, None), P())
+    elif cfg.attention == "mla":
+        kv = (P(None, b_ax, s_ax, None), P(None, b_ax, s_ax, None), P())
+    else:
+        kv = (P(None, b_ax, s_ax, None, None),
+              P(None, b_ax, s_ax, None, None), P())
+    from .model import _layer_split
+    n_dense, n_moe = _layer_split(cfg)
+    out = {}
+    if n_dense:
+        out["dense_blocks"] = kv
+    if n_moe:
+        out["moe_blocks"] = kv
+    return out

@@ -1,0 +1,128 @@
+"""Jittable train / prefill / decode steps for the LM architectures."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optim import (adafactor_init, adafactor_update, adamw_init,
+                               adamw_update, clip_by_global_norm,
+                               compress_grads)
+from .config import LMConfig
+from .model import (forward, init_cache, logits_fn, mtp_head, set_cache_pos)
+
+AUX_COEF = 0.01
+MTP_COEF = 0.3
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean next-token CE in fp32 (stable logsumexp).
+
+    The gold logit is picked with a one-hot contraction, not
+    take_along_axis: gathering by index across a vocab-SHARDED logits
+    tensor would force GSPMD to all-gather the whole [B,S,V] buffer,
+    while the one-hot einsum reduces shard-locally (psum of partials).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    return jnp.mean(lse - gold)
+
+
+def loss_fn(params, cfg: LMConfig, tokens: jax.Array):
+    hidden, aux, _ = forward(params, cfg, tokens)
+    logits = logits_fn(params, cfg, hidden)
+    loss = cross_entropy(logits[:, :-1], tokens[:, 1:])
+    if cfg.mtp_depth:
+        mtp_logits = mtp_head(params, cfg, hidden, tokens)
+        loss = loss + MTP_COEF * cross_entropy(mtp_logits[:, :-1], tokens[:, 2:])
+    total = loss + AUX_COEF * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def make_train_step(cfg: LMConfig, lr: float = 3e-4):
+    opt = cfg.optimizer
+
+    def grads_of(params, tokens):
+        if cfg.microbatch <= 1:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, cfg,
+                                                             tokens)
+        # gradient accumulation: activation live-range shrinks by the
+        # microbatch factor; grads/metrics are averaged exactly
+        B = tokens.shape[0]
+        assert B % cfg.microbatch == 0
+        mb = tokens.reshape(cfg.microbatch, B // cfg.microbatch, -1)
+
+        def body(carry, toks):
+            acc, aux_acc = carry
+            (t, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, cfg, toks)
+            acc = jax.tree.map(lambda a, b: a + b, acc, g)
+            aux_acc = jax.tree.map(lambda a, b: a + b, aux_acc, (t, m))
+            return (acc, aux_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        aux0 = (jnp.zeros(()), {"loss": jnp.zeros(()), "aux": jnp.zeros(())})
+        (grads, (tot, mets)), _ = jax.lax.scan(
+            body, (zeros, aux0), mb,
+            unroll=cfg.microbatch if cfg.scan_unroll else 1)
+        n = float(cfg.microbatch)
+        return ((tot / n, jax.tree.map(lambda x: x / n, mets)),
+                jax.tree.map(lambda g: g / n, grads))
+
+    def train_step(params, opt_state, tokens):
+        (total, metrics), grads = grads_of(params, tokens)
+        grads, gn = clip_by_global_norm(grads, 1.0)
+        if cfg.grad_compression != "none":
+            grads, _ = compress_grads(grads, cfg.grad_compression)
+        if opt == "adamw":
+            params, opt_state = adamw_update(grads, opt_state, params, lr=lr)
+        else:
+            params, opt_state = adafactor_update(grads, opt_state, params, lr=lr)
+        metrics = dict(metrics, grad_norm=gn, total=total)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_opt_state(cfg: LMConfig, params):
+    return adamw_init(params) if cfg.optimizer == "adamw" \
+        else adafactor_init(params)
+
+
+def make_prefill_step(cfg: LMConfig, max_seq: int | None = None):
+    """tokens [B,S] -> (caches filled to S, last-position logits)."""
+
+    def prefill(params, tokens):
+        B, S = tokens.shape
+        hidden, _, kvs = forward(params, cfg, tokens)  # single pass
+        logits = logits_fn(params, cfg, hidden[:, -1:])
+        smax = max_seq or S
+        caches = {}
+        for stack, (k, v) in kvs.items():  # k/v [L,B,S,...]
+            pad = [(0, 0)] * k.ndim
+            pad[2] = (0, smax - S)
+            caches[stack] = (jnp.pad(k, pad), jnp.pad(v, pad),
+                             jnp.asarray(S, jnp.int32))
+        return logits, caches
+
+    return prefill
+
+
+def make_decode_step(cfg: LMConfig):
+    """One token for every sequence in the batch, against a KV cache."""
+
+    def decode(params, caches, last_tokens, pos):
+        B = last_tokens.shape[0]
+        positions = jnp.broadcast_to(pos[None], (B, 1))
+        caches = set_cache_pos(caches, pos)
+        hidden, _, caches = forward(params, cfg, last_tokens[:, None],
+                                    caches=caches, positions=positions)
+        logits = logits_fn(params, cfg, hidden[:, -1])
+        caches = set_cache_pos(caches, pos + 1)
+        return logits, caches
+
+    return decode

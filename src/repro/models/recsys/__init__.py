@@ -1,0 +1,1 @@
+from .dlrm import init_dlrm, dlrm_forward  # noqa: F401

@@ -1,0 +1,95 @@
+"""DLRM RM2 (arXiv:1906.00091): sparse embeddings -> dot interaction -> MLPs.
+
+JAX has no nn.EmbeddingBag: the lookup is implemented as ``jnp.take`` +
+``jax.ops.segment_sum`` over ragged multi-hot bags (kernel_taxonomy §RecSys);
+the Pallas ``embedding_bag`` kernel implements the same contract for TPU.
+
+Embedding tables shard row-wise over the ``model`` mesh axis; the batch over
+``data``.  The retrieval shape scores one query against 1M candidates with a
+single batched dot (no loop).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn.common import init_mlp, mlp
+
+
+class DLRMConfig(NamedTuple):
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    vocab_sizes: tuple[int, ...] = ()          # len == n_sparse
+    bot_mlp: tuple[int, ...] = (512, 256, 64)
+    top_mlp: tuple[int, ...] = (512, 512, 256, 1)
+    multi_hot: int = 1                         # lookups per field (bag size)
+
+
+def rm2_vocab_sizes(n_sparse: int = 26, seed: int = 7) -> tuple[int, ...]:
+    """Criteo-like skewed table sizes: a few huge tables, many small."""
+    rng = np.random.default_rng(seed)
+    sizes = 10 ** rng.uniform(3.0, 7.0, size=n_sparse)
+    sizes[:3] = [10_000_000, 8_000_000, 4_000_000]  # the heavy hitters
+    # round rows to multiples of 256 so tables shard evenly over `model`
+    return tuple(int(-(-int(s) // 256) * 256) for s in sizes)
+
+
+def init_dlrm(key, cfg: DLRMConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, cfg.n_sparse + 2)
+    tables = [
+        (jax.random.normal(ks[i], (v, cfg.embed_dim), jnp.float32)
+         / np.sqrt(cfg.embed_dim)).astype(dtype)
+        for i, v in enumerate(cfg.vocab_sizes)
+    ]
+    n_int = cfg.n_sparse + 1          # interaction features incl. dense
+    d_int = n_int * (n_int - 1) // 2 + cfg.embed_dim
+    return {
+        "tables": tables,
+        "bot": init_mlp(ks[-2], [cfg.n_dense, *cfg.bot_mlp], dtype),
+        "top": init_mlp(ks[-1], [d_int, *cfg.top_mlp], dtype),
+    }
+
+
+def embedding_bag(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """Sum-mode bag: idx [B, hot] -> [B, d].  take + segment-free sum."""
+    return jnp.take(table, idx, axis=0).sum(axis=1)
+
+
+def dlrm_forward(params, cfg: DLRMConfig, dense: jax.Array,
+                 sparse_idx: jax.Array) -> jax.Array:
+    """dense [B, n_dense]; sparse_idx [B, n_sparse, multi_hot] -> logits [B]."""
+    B = dense.shape[0]
+    x_dense = mlp(params["bot"], dense, act=jax.nn.relu)      # [B, d]
+    embs = [embedding_bag(t, sparse_idx[:, f])                # [B, d] each
+            for f, t in enumerate(params["tables"])]
+    feats = jnp.stack([x_dense] + embs, axis=1)               # [B, F, d]
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)          # dot interaction
+    iu, ju = jnp.triu_indices(feats.shape[1], k=1)
+    flat = inter[:, iu, ju]                                   # [B, F(F-1)/2]
+    z = jnp.concatenate([x_dense, flat], axis=-1)
+    return mlp(params["top"], z, act=jax.nn.relu)[:, 0]
+
+
+def dlrm_loss(params, cfg: DLRMConfig, dense, sparse_idx, labels):
+    logits = dlrm_forward(params, cfg, dense, sparse_idx)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))  # stable BCE-with-logits
+
+
+def retrieval_scores(params, cfg: DLRMConfig, query_dense: jax.Array,
+                     query_sparse: jax.Array, cand_emb: jax.Array) -> jax.Array:
+    """Two-tower retrieval: one query vs n_candidates (batched dot).
+
+    query_dense [1, n_dense]; query_sparse [1, n_sparse, hot];
+    cand_emb [N, d] precomputed item tower -> scores [N].
+    """
+    x_dense = mlp(params["bot"], query_dense, act=jax.nn.relu)
+    embs = [embedding_bag(t, query_sparse[:, f])
+            for f, t in enumerate(params["tables"])]
+    q = x_dense + sum(embs)                                   # [1, d] user tower
+    return (cand_emb @ q[0]).astype(jnp.float32)

@@ -1,0 +1,2 @@
+from .optim import (adafactor_init, adafactor_update, adamw_init,  # noqa: F401
+                    adamw_update, clip_by_global_norm, make_optimizer)

@@ -1,0 +1,181 @@
+"""Optimizers built from scratch (no optax in the environment).
+
+AdamW for the small/medium configs; Adafactor (factored second moments,
+Shazeer & Stern arXiv:1804.04235) for the 100B+ configs where Adam's 8
+bytes/param of fp32 state cannot fit 16 GB/chip HBM (DESIGN.md §5).
+
+Also: global-norm clipping and gradient-compression hooks (int8 with
+per-tensor scale; top-k with error feedback) used by the distributed
+training step before the data-parallel all-reduce.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Pytree
+    nu: Pytree
+
+
+def adamw_init(params: Pytree) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_update(grads: Pytree, state: AdamWState, params: Pytree, *,
+                 lr: float, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        step_ = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; no first moment)
+# ---------------------------------------------------------------------------
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Pytree  # row stats (or full v for <2D tensors)
+    vc: Pytree  # col stats (zeros placeholder for <2D)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params: Pytree) -> AdafactorState:
+    def rows(p):
+        return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+                else jnp.zeros(p.shape, jnp.float32))
+
+    def cols(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p) else jnp.zeros((1,), jnp.float32))
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree.map(rows, params),
+                          vc=jax.tree.map(cols, params))
+
+
+def adafactor_update(grads: Pytree, state: AdafactorState, params: Pytree, *,
+                     lr: float, decay: float = 0.8, eps: float = 1e-30,
+                     clip_threshold: float = 1.0, weight_decay: float = 0.0):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-decay)
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p):
+            vr = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+            r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+            u = g * jax.lax.rsqrt(r)[..., None] * jax.lax.rsqrt(vc)[..., None, :]
+        else:
+            vr = beta2 * vr + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(vr)
+        # update clipping (RMS <= clip_threshold)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        new_p = (p.astype(jnp.float32) * (1.0 - lr * weight_decay) - lr * u)
+        return new_p.astype(p.dtype), vr, vc
+
+    out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+    sel = lambda i: jax.tree.map(lambda o: o[i], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    return sel(0), AdafactorState(step=step, vr=sel(1), vc=sel(2))
+
+
+# ---------------------------------------------------------------------------
+# shared utilities
+# ---------------------------------------------------------------------------
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Pytree:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def make_optimizer(name: str):
+    """Returns (init_fn, update_fn(grads, state, params, lr))."""
+    if name == "adamw":
+        return adamw_init, partial(adamw_update)
+    if name == "adafactor":
+        return adafactor_init, partial(adafactor_update)
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (distributed-optimization hook)
+# ---------------------------------------------------------------------------
+class CompressionState(NamedTuple):
+    error: Pytree  # error-feedback residual (top-k)
+
+
+def compression_init(params: Pytree, method: str) -> CompressionState | None:
+    if method == "topk":
+        return CompressionState(error=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+    return None
+
+
+def compress_grads(grads: Pytree, method: str,
+                   comp_state: CompressionState | None = None,
+                   topk_frac: float = 0.01):
+    """Lossy-compress gradients before the DP all-reduce.
+
+    int8: per-tensor absmax int8 quantize/dequantize (8x wire reduction).
+    topk: keep the top `topk_frac` |g| entries, accumulate the rest into an
+    error-feedback residual (Stich et al., arXiv:1809.07599).
+    """
+    if method == "none":
+        return grads, comp_state
+    if method == "int8":
+        def q(g):
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-9) / 127.0
+            return (jnp.round(g / scale).astype(jnp.int8).astype(g.dtype)
+                    * scale)
+        return jax.tree.map(q, grads), comp_state
+    if method == "topk":
+        def tk(g, e):
+            gf = g.astype(jnp.float32) + e
+            k = max(1, int(gf.size * topk_frac))
+            thresh = jax.lax.top_k(jnp.abs(gf).reshape(-1), k)[0][-1]
+            mask = jnp.abs(gf) >= thresh
+            sent = gf * mask
+            return sent.astype(g.dtype), gf - sent
+
+        out = jax.tree.map(tk, grads, comp_state.error)
+        sel = lambda i: jax.tree.map(lambda o: o[i], out,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        return sel(0), CompressionState(error=sel(1))
+    raise ValueError(method)

@@ -1,0 +1,43 @@
+"""Shared small utilities: padding, bucketing, tree math."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def next_bucket(n: int, *, minimum: int = 16) -> int:
+    """Round ``n`` up to the next power of two (>= minimum).
+
+    Bucketing dynamic sizes to powers of two bounds the number of distinct
+    jit compilations to O(log n) while wasting at most 2x padding.
+    """
+    if n <= minimum:
+        return minimum
+    return 1 << math.ceil(math.log2(n))
+
+
+def pad_to(arr: np.ndarray, size: int, fill=0) -> np.ndarray:
+    """Pad axis 0 of ``arr`` with ``fill`` up to ``size`` entries."""
+    if arr.shape[0] == size:
+        return arr
+    if arr.shape[0] > size:
+        raise ValueError(f"cannot pad {arr.shape[0]} down to {size}")
+    pad_width = [(0, size - arr.shape[0])] + [(0, 0)] * (arr.ndim - 1)
+    return np.pad(arr, pad_width, constant_values=fill)
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB", "PiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}EiB"
+
+
+def human_count(n: float) -> str:
+    for unit in ("", "K", "M", "G", "T", "P"):
+        if abs(n) < 1000.0:
+            return f"{n:.3g}{unit}"
+        n /= 1000.0
+    return f"{n:.3g}E"

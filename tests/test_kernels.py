@@ -1,0 +1,100 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import erdos_renyi
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,m,d,blk", [(100, 400, 32, 32), (257, 1500, 64, 64),
+                                       (64, 300, 128, 64), (300, 2000, 16, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_mm(n, m, d, blk, dtype):
+    from repro.kernels.segment_mm import segment_mm
+    from repro.kernels.segment_mm.ref import segment_mm_ref
+    src, dst, w = erdos_renyi(n, m, seed=1, weighted=True)
+    x = jnp.asarray(RNG.normal(size=(n, d)), dtype)
+    out = segment_mm(src, dst, w, x, n, blk=blk)
+    ref = segment_mm_ref(jnp.asarray(src), jnp.asarray(dst),
+                         jnp.asarray(w).astype(dtype), x, n)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("R,Din,Dout", [(64, 32, 16), (128, 128, 128),
+                                        (33, 48, 7), (256, 64, 200)])
+@pytest.mark.parametrize("mean,relu", [(False, True), (True, False), (True, True)])
+def test_delta_apply(R, Din, Dout, mean, relu):
+    from repro.kernels.delta_apply import delta_apply
+    from repro.kernels.delta_apply.ref import delta_apply_ref
+    S = jnp.asarray(RNG.normal(size=(R, Din)), jnp.float32)
+    M = jnp.asarray(RNG.normal(size=(R, Din)), jnp.float32)
+    k = jnp.asarray(RNG.integers(0, 6, size=R), jnp.float32)
+    W = jnp.asarray(RNG.normal(size=(Din, Dout)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=Dout), jnp.float32)
+    Sn, h = delta_apply(S, M, k, W, b, mean=mean, relu=relu)
+    Sr, hr = delta_apply_ref(S, M, k, W, b, mean=mean, relu=relu)
+    np.testing.assert_allclose(Sn, Sr, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(h, hr, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("V,B,hot,d", [(100, 8, 1, 16), (1000, 32, 4, 64),
+                                       (5000, 16, 8, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag(V, B, hot, d, dtype):
+    from repro.kernels.embedding_bag import embedding_bag_kernel
+    from repro.kernels.embedding_bag.ref import embedding_bag_ref
+    table = jnp.asarray(RNG.normal(size=(V, d)), dtype)
+    idx = jnp.asarray(RNG.integers(0, V, size=(B, hot)), jnp.int32)
+    out = embedding_bag_kernel(table, idx)
+    ref = embedding_bag_ref(table, idx)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,Hkv,Dh,bq,bkv",
+                         [(2, 64, 4, 2, 16, 16, 16),
+                          (1, 128, 8, 8, 32, 32, 64),
+                          (2, 96, 6, 2, 8, 32, 32),
+                          (1, 256, 4, 1, 64, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, S, H, Hkv, Dh, bq, bkv, dtype):
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    q = jnp.asarray(RNG.normal(size=(B, S, H, Dh)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, S, Hkv, Dh)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, S, Hkv, Dh)), dtype)
+    out = flash_attention(q, k, v, bq=bq, bkv=bkv)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               **(_tol(dtype) if dtype == jnp.bfloat16
+                                  else dict(atol=1e-5, rtol=1e-4)))
+
+
+# flash attention must also match the model's chunked-jnp attention path
+def test_flash_matches_model_attention():
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.lm.config import LMConfig
+    from repro.models.lm.model import causal_attention
+    cfg = LMConfig(name="t", n_layers=1, d_model=64, n_heads=4, n_kv_heads=2,
+                   d_ff=64, vocab=32, d_head=16, attn_chunk=32)
+    q = jnp.asarray(RNG.normal(size=(2, 64, 4, 16)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 64, 2, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 64, 2, 16)), jnp.float32)
+    a = flash_attention(q, k, v, bq=32, bkv=32)
+    b = causal_attention(q, k, v, cfg)
+    np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-4)

@@ -1,0 +1,69 @@
+"""Property tests: partitioner invariants + graph-store consistency."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import DynamicGraph, erdos_renyi
+from repro.core.partition import edge_cut, ldg_partition
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(10, 80), parts=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 5))
+def test_partition_invariants(n, parts, seed):
+    src, dst, _ = erdos_renyi(n, 4 * n, seed=seed)
+    p = ldg_partition(n, src, dst, parts, seed=seed)
+    # every vertex assigned
+    assert (p.part_of >= 0).all() and (p.part_of < parts).all()
+    # balance within the LDG slack
+    counts = p.local_counts()
+    assert counts.max() <= int(np.ceil(n / parts * 1.05)) + 1
+    # relabeling is a bijection consistent with ownership
+    assert np.unique(p.new_of_old).size == n
+    back = p.old_of_new[p.new_of_old]
+    np.testing.assert_array_equal(back, np.arange(n))
+    np.testing.assert_array_equal(p.new_of_old // p.n_local, p.part_of)
+
+
+def test_partition_cuts_beat_random():
+    """LDG should not be worse than a random assignment on a community graph."""
+    rng = np.random.default_rng(0)
+    # two dense communities + sparse cross edges
+    n_half = 60
+    a = rng.integers(0, n_half, size=(800, 2))
+    b = rng.integers(n_half, 2 * n_half, size=(800, 2))
+    cross = np.stack([rng.integers(0, n_half, 40),
+                      rng.integers(n_half, 2 * n_half, 40)], 1)
+    e = np.concatenate([a, b, cross])
+    e = e[e[:, 0] != e[:, 1]]
+    p = ldg_partition(2 * n_half, e[:, 0], e[:, 1], 2, seed=0)
+    cut = edge_cut(p.part_of, e[:, 0], e[:, 1])
+    rand = rng.integers(0, 2, 2 * n_half)
+    rand_cut = edge_cut(rand, e[:, 0], e[:, 1])
+    assert cut < rand_cut
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(5, 30), seed=st.integers(0, 10))
+def test_graph_store_consistency(n, seed):
+    """out-CSR, in-CSR, degree and edge-set stay mutually consistent under
+    arbitrary add/delete sequences."""
+    rng = np.random.default_rng(seed)
+    src, dst, w = erdos_renyi(n, 2 * n, seed=seed)
+    g = DynamicGraph(n, src, dst, w)
+    for _ in range(30):
+        u, v = rng.integers(0, n, 2)
+        if u == v:
+            continue
+        if rng.random() < 0.5:
+            g.add_edge(int(u), int(v), float(rng.uniform(0.1, 1)))
+        else:
+            g.delete_edge(int(u), int(v))
+    s2, d2, _ = g.coo()
+    assert g.num_edges == s2.size == len(g._edge_set)
+    # in-degree matches dst counts; in-CSR mirrors out-CSR
+    np.testing.assert_array_equal(g.in_degree,
+                                  np.bincount(d2, minlength=n).astype(np.float32))
+    ip, ic, _ = g.csr_in()
+    pairs_in = {(int(ic[j]), int(v)) for v in range(n)
+                for j in range(ip[v], ip[v + 1])}
+    assert pairs_in == g._edge_set

@@ -1,0 +1,16 @@
+"""Owner-partitioned push message passing equals the dense forward."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_partitioned_schnet_subprocess():
+    script = os.path.join(os.path.dirname(__file__), "part_runner.py")
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    res = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, timeout=900, env=env)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "OK partitioned-schnet" in res.stdout
