@@ -14,9 +14,9 @@ import time
 import numpy as np
 import jax
 
-from repro.core import (DynamicGraph, InferenceState, RecomputeEngine,
-                        RippleEngine, erdos_renyi, make_workload,
-                        params_to_numpy, powerlaw_graph)
+from repro.api import make_engine
+from repro.core import (DynamicGraph, InferenceState, erdos_renyi,
+                        make_workload, powerlaw_graph)
 from repro.data.streams import make_stream, snapshot_split
 
 GRAPHS = {
@@ -42,8 +42,8 @@ def setup(graph: str, workload: str, n_layers: int = 2, d_in: int = 64,
 
 
 def engine_for(kind: str, wl, params, g, state):
-    cls = {"ripple": RippleEngine, "rc": RecomputeEngine}[kind]
-    return cls(wl, params_to_numpy(params), g, state)
+    """Any registered backend by name — dispatch lives in the registry."""
+    return make_engine(kind, wl, params, g, state)
 
 
 def run_stream(engine, g, holdout, n_updates: int, batch_size: int,

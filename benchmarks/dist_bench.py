@@ -30,8 +30,8 @@ def run(parts: int, mode: str, n=1500, m=30000, batch=100, n_updates=600):
     rng = np.random.default_rng(0)
     x = rng.normal(size=(n, D)).astype(np.float32)
     params = wl.init_params(jax.random.PRNGKey(0))
-    mesh = jax.make_mesh((parts, 8 // parts), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.utils import make_mesh_compat
+    mesh = make_mesh_compat((parts, 8 // parts), ("data", "model"))
     eng = DistEngine(wl, params, x, g, mesh, mode=mode)
     stream = make_stream(g, holdout, n_updates, D, seed=1)
 

@@ -46,26 +46,27 @@ def fig2b_affected_fraction():
 
 
 def fig8_strategy_comparison():
-    """Vertex-wise vs layer-wise recompute vs RC vs RIPPLE (Fig 8)."""
-    from repro.core.full import full_inference
-    from repro.core.vertexwise import VertexWiseEngine
-    from repro.core import params_to_numpy
-    import jax.numpy as jnp
+    """Vertex-wise vs layer-wise recompute vs RC vs RIPPLE (Fig 8).
+
+    All four strategies are registry entries consumed through the one
+    Engine protocol — no per-engine wiring in the harness."""
+    from repro.core.graph import UpdateBatch
 
     wl, g, x, params, holdout = setup("arxiv-like", "gc-s", n_layers=3)
     state = InferenceState.bootstrap(wl, params, x, g)
 
     # DNC analog: vertex-wise recompute of 20 targets
-    vw = VertexWiseEngine(wl, params_to_numpy(params), g, x)
+    vw = engine_for("vertexwise", wl, params, g, state)
     t0 = time.perf_counter()
-    vw.infer(np.arange(20))
+    vw.query(np.arange(20))
     emit("fig8/vertex-wise20", (time.perf_counter() - t0) * 1e6,
          f"agg_ops={vw.ops}")
 
-    # DRC analog: full layer-wise pass over the whole graph
-    t0 = time.perf_counter()
-    full_inference(wl, params, jnp.asarray(x), *g.coo(), g.in_degree)
-    emit("fig8/layerwise-full", (time.perf_counter() - t0) * 1e6,
+    # DRC analog: full layer-wise pass over the whole graph (an empty batch
+    # through the "full" engine is exactly one from-scratch pass)
+    full = engine_for("full", wl, params, g, state.clone())
+    res = full.apply_batch(UpdateBatch())
+    emit("fig8/layerwise-full", res.wall_seconds * 1e6,
          f"edges={g.num_edges}")
 
     # RC and RIPPLE on identical batches of 10

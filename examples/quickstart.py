@@ -1,8 +1,9 @@
-"""Quickstart: streaming GNN inference with RIPPLE in ~40 lines.
+"""Quickstart: streaming GNN inference with RIPPLE in ~30 lines.
 
-Builds a graph, bootstraps embeddings with a trained 2-layer GraphSAGE,
-then streams edge/feature updates through the incremental engine and shows
-which vertex labels changed — the paper's trigger-based serving loop.
+Builds a graph, bootstraps embeddings with a trained 2-layer GraphSAGE
+through the unified ``InferenceSession`` API, then streams edge/feature
+updates through the incremental engine and shows which vertex labels
+changed — the paper's trigger-based serving loop.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,9 +15,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 import jax
 
-from repro.core import (DynamicGraph, EdgeUpdate, FeatureUpdate,
-                        InferenceState, RippleEngine, UpdateBatch,
-                        erdos_renyi, make_workload, params_to_numpy)
+from repro.api import InferenceSession
+from repro.core import (DynamicGraph, EdgeUpdate, FeatureUpdate, UpdateBatch,
+                        erdos_renyi, make_workload)
 
 # 1. a graph + a "trained" model (random weights stand in for a checkpoint)
 n = 500
@@ -27,20 +28,21 @@ features = np.random.default_rng(0).normal(size=(n, 16)).astype(np.float32)
 params = workload.init_params(jax.random.PRNGKey(0))
 
 # 2. bootstrap: one full layer-wise pass precomputes ALL per-layer embeddings
-state = InferenceState.bootstrap(workload, params, features, graph)
-labels_before = state.labels()
+session = InferenceSession.bootstrap(workload, params, features, graph,
+                                     engine="ripple")
+labels_before = session.predict()
 print(f"bootstrapped {n} vertices; initial label histogram:",
       np.bincount(labels_before, minlength=6))
 
 # 3. stream updates: the engine applies exact delta messages (no recompute)
-engine = RippleEngine(workload, params_to_numpy(params), graph, state)
 batch = UpdateBatch(
     edges=[EdgeUpdate(3, 77, add=True), EdgeUpdate(10, 20, add=False)],
     features=[FeatureUpdate(42, np.ones(16, dtype=np.float32))])
-stats = engine.apply_batch(batch)
+report = session.ingest(batch)
+stats = report.results[0]
 
-changed = np.nonzero(labels_before != state.labels())[0]
-print(f"batch of {len(batch)} updates -> {stats.total_affected} vertices "
+changed = np.nonzero(labels_before != session.predict())[0]
+print(f"batch of {report.n_updates} updates -> {stats.total_affected} vertices "
       f"touched across hops {stats.affected_per_hop}, "
       f"{stats.numeric_ops} aggregation ops, "
       f"{stats.wall_seconds * 1e3:.2f} ms")

@@ -1,71 +1,52 @@
 """End-to-end driver: SERVE a GNN over a streaming graph with batched
 update requests — bootstrap, journaled ingest, incremental engine,
-latency/throughput report, checkpoint + crash recovery.
+latency/throughput report, checkpoint + crash recovery, and a mid-stream
+hot-swap onto the jitted device backend.
 
-This is the paper's deployment shape (trigger-based streaming inference);
-run it:
+This is the paper's deployment shape (trigger-based streaming inference)
+expressed through the unified session API; any registered engine name
+("ripple", "rc", "device", "full", "vertexwise") slots in unchanged:
 
     PYTHONPATH=src python examples/streaming_serve.py
 """
 import os
 import sys
 import tempfile
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
-import jax
-
-from repro.core import (DynamicGraph, InferenceState, RippleEngine,
-                        make_workload, params_to_numpy, powerlaw_graph)
-from repro.core.engine import RecomputeEngine
-from repro.data.streams import make_stream, snapshot_split
-from repro.ckpt import CheckpointManager, UpdateJournal
+from repro.api import InferenceSession, SessionConfig
 
 N, M, D = 3000, 40000, 64
 N_UPDATES, BATCH = 2000, 50
 
-workload = make_workload("gc-s", n_layers=2, d_in=D, d_hidden=64, n_classes=16)
-src, dst, w = powerlaw_graph(N, M, seed=0)
-snapshot, holdout = snapshot_split(src, dst, w, 0.1)
-graph = DynamicGraph(N, *snapshot)
-x = np.random.default_rng(0).normal(size=(N, D)).astype(np.float32)
-params = workload.init_params(jax.random.PRNGKey(0))
 
-state = InferenceState.bootstrap(workload, params, x, graph)
-engine = RippleEngine(workload, params_to_numpy(params), graph, state)
+def serve(engine: str, workdir: str = ""):
+    session = InferenceSession.build(SessionConfig(
+        workload="gc-s", engine=engine, graph="powerlaw", n=N, m=M,
+        d_in=D, d_hidden=64, n_classes=16,
+        ckpt_dir=workdir, ckpt_every=10, ckpt_keep=2))
+    stream = session.make_stream(N_UPDATES, seed=1)
+    report = session.ingest(stream, batch_size=BATCH, keep_results=False)
+    return session, report
+
 
 workdir = tempfile.mkdtemp(prefix="ripple_serve_")
-journal = UpdateJournal(os.path.join(workdir, "updates.jsonl"))
-ckpt = CheckpointManager(workdir, every=10, keep=2)
+session, rp = serve("ripple", workdir)
+print(f"served {rp.n_updates} updates in {rp.wall_seconds:.2f}s "
+      f"({rp.throughput:.0f} up/s), "
+      f"median batch latency {rp.median_latency_ms:.2f} ms, "
+      f"p99 {rp.p99_latency_ms:.2f} ms")
 
-stream = make_stream(graph, holdout, N_UPDATES, D, seed=1)
-lat = []
-t0 = time.perf_counter()
-for i, batch in enumerate(stream.batches(BATCH)):
-    journal.append(batch)                      # write-ahead: crash-safe
-    t = time.perf_counter()
-    stats = engine.apply_batch(batch)
-    lat.append(time.perf_counter() - t)
-    ckpt.maybe_save({"H": state.H, "S": state.S, "k": state.k}, i)
-wall = time.perf_counter() - t0
+# contrast with the recompute baseline on the same stream — same API,
+# different registry entry
+_, rc = serve("rc")
+print(f"recompute baseline: {rc.throughput:.0f} up/s -> "
+      f"RIPPLE speedup {rc.wall_seconds / rp.wall_seconds:.1f}x")
 
-lat_ms = np.array(lat) * 1e3
-print(f"served {N_UPDATES} updates in {wall:.2f}s "
-      f"({N_UPDATES / wall:.0f} up/s), "
-      f"median batch latency {np.median(lat_ms):.2f} ms, "
-      f"p99 {np.percentile(lat_ms, 99):.2f} ms")
-
-# contrast with the recompute baseline on the same stream
-graph2 = DynamicGraph(N, *snapshot)
-state2 = InferenceState.bootstrap(workload, params, x, graph2)
-rc = RecomputeEngine(workload, params_to_numpy(params), graph2, state2)
-stream2 = make_stream(graph2, holdout, N_UPDATES, D, seed=1)
-t0 = time.perf_counter()
-for batch in stream2.batches(BATCH):
-    rc.apply_batch(batch)
-rc_wall = time.perf_counter() - t0
-print(f"recompute baseline: {N_UPDATES / rc_wall:.0f} up/s -> "
-      f"RIPPLE speedup {rc_wall / wall:.1f}x")
+# hot-swap the live session onto the jitted device backend and keep serving
+session.swap_engine("device")
+dev = session.ingest(session.make_stream(200, seed=2), batch_size=BATCH)
+print(f"hot-swapped to device engine mid-stream: served {dev.n_updates} more "
+      f"updates at {dev.throughput:.0f} up/s (incl. compile)")
 print(f"journal + checkpoints in {workdir} (restart replays from there)")

@@ -1,0 +1,9 @@
+# Unified serving layer: one Engine protocol + registry over every
+# execution backend, and the InferenceSession facade (ingest / query /
+# checkpoint / hot-swap).  Importing this package registers all built-in
+# engines.
+from .registry import (Engine, UpdateResult, canonical_name,  # noqa: F401
+                       engine_names, make_engine, register_engine)
+from . import engines  # noqa: F401  (registers ripple/rc/device/vertexwise/full)
+from .session import (InferenceSession, IngestReport,  # noqa: F401
+                      SessionConfig)

@@ -1,0 +1,209 @@
+"""Registry adapters for every execution backend.
+
+Each adapter normalizes one backend to the ``Engine`` protocol: constructor
+``(workload, params, graph, state)`` with ``params`` the JAX pytree from
+``Workload.init_params`` (NumPy conversion happens *here*, not at call
+sites), ``apply_batch`` returning an ``UpdateResult``, and ``sync()``
+returning the authoritative host ``InferenceState``.
+
+Registered backends:
+
+    ripple      incremental delta-message engine (paper §4.3, host NumPy)
+    rc          layer-wise recompute over affected neighborhoods (§4.2)
+    device      fully-jitted TPU/XLA propagation (device_engine.py)
+    vertexwise  per-target recursive expansion (the paper's DNC baseline);
+                lazy — updates mutate the graph/features, embeddings are
+                computed on query
+    full        from-scratch layer-wise inference over the whole graph on
+                every batch (the exactness oracle as an engine)
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.engine import RecomputeEngine, RippleEngine
+from repro.core.device_engine import DeviceEngine
+from repro.core.full import full_inference
+from repro.core.graph import DynamicGraph, UpdateBatch
+from repro.core.state import InferenceState, params_to_numpy
+from repro.core.vertexwise import VertexWiseEngine
+from repro.core.workloads import Workload
+
+from .registry import UpdateResult, register_engine
+
+import jax.numpy as jnp
+
+
+def _touched(batch: UpdateBatch) -> np.ndarray:
+    """Vertices directly hit by a batch (edge dsts + feature targets)."""
+    ids = [e.dst for e in batch.edges] + [f.vertex for f in batch.features]
+    return np.unique(np.asarray(ids, dtype=np.int64))
+
+
+def _materialize_state(workload: Workload, params: list, graph: DynamicGraph,
+                       state: InferenceState) -> InferenceState:
+    """From-scratch layer-wise pass over the current graph + features,
+    written into ``state`` in place (exact, the oracle's output)."""
+    H, S = full_inference(workload, params, jnp.asarray(state.H[0]),
+                          *graph.coo(), graph.in_degree)
+    state.H = [np.array(h, dtype=np.float32) for h in H]
+    state.S = [np.array(s, dtype=np.float32) for s in S]
+    state.k = graph.in_degree.copy()
+    return state
+
+
+class _HostAdapter:
+    """Shared adapter over the NumPy host engines (ripple / rc)."""
+
+    _impl_cls: type
+
+    def __init__(self, workload: Workload, params: list,
+                 graph: DynamicGraph, state: InferenceState):
+        self._impl = self._impl_cls(workload, params_to_numpy(params),
+                                    graph, state)
+
+    def apply_batch(self, batch: UpdateBatch) -> UpdateResult:
+        s = self._impl.apply_batch(batch)
+        return UpdateResult(affected=np.asarray(s.final_affected),
+                            wall_seconds=s.wall_seconds,
+                            affected_per_hop=s.affected_per_hop,
+                            messages_per_hop=s.messages_per_hop,
+                            numeric_ops=s.numeric_ops)
+
+    def sync(self) -> InferenceState:
+        return self._impl.state
+
+    @property
+    def state(self) -> InferenceState:
+        return self._impl.state
+
+
+@register_engine("ripple", "rp")
+class RippleAdapter(_HostAdapter):
+    _impl_cls = RippleEngine
+
+
+@register_engine("rc", "recompute")
+class RecomputeAdapter(_HostAdapter):
+    _impl_cls = RecomputeEngine
+
+
+@register_engine("device", "jit")
+class DeviceAdapter:
+    """Jitted device propagation; state lives on device between batches.
+
+    ``sync()`` downloads the device state *into the host ``InferenceState``
+    object this adapter was built from* (in place), so hot-swapping to a
+    host engine hands over the same arrays the session already holds.
+    """
+
+    def __init__(self, workload: Workload, params: list,
+                 graph: DynamicGraph, state: InferenceState):
+        self._host = state
+        self._impl = DeviceEngine(workload, params, graph, state)
+
+    def apply_batch(self, batch: UpdateBatch) -> UpdateResult:
+        t0 = time.perf_counter()
+        affected = self._impl.apply_batch(batch)
+        return UpdateResult(affected=affected,
+                            wall_seconds=time.perf_counter() - t0,
+                            affected_per_hop=[int(affected.size)])
+
+    def sync(self) -> InferenceState:
+        dev = self._impl.state
+        for h_host, h_dev in zip(self._host.H, dev.H):
+            h_host[...] = np.asarray(h_dev)
+        for s_host, s_dev in zip(self._host.S, dev.S):
+            s_host[...] = np.asarray(s_dev)
+        self._host.k[...] = np.asarray(dev.k)
+        return self._host
+
+    @property
+    def state(self) -> InferenceState:
+        return self.sync()
+
+    def query(self, vertices: np.ndarray) -> np.ndarray:
+        """Backend-native read: final-layer rows straight off the device."""
+        return np.asarray(self._impl.state.H[-1][jnp.asarray(vertices)])
+
+
+@register_engine("full", "oracle")
+class FullRecomputeAdapter:
+    """From-scratch layer-wise inference after every batch (§2.1 baseline)."""
+
+    def __init__(self, workload: Workload, params: list,
+                 graph: DynamicGraph, state: InferenceState):
+        self.workload = workload
+        self.params = params
+        self.graph = graph
+        self._state = state
+
+    def apply_batch(self, batch: UpdateBatch) -> UpdateResult:
+        t0 = time.perf_counter()
+        self.graph.apply_topology(batch.edges)
+        for f in batch.features:
+            self._state.H[0][f.vertex] = np.asarray(f.value, dtype=np.float32)
+        _materialize_state(self.workload, self.params, self.graph,
+                           self._state)
+        return UpdateResult(affected=_touched(batch),
+                            wall_seconds=time.perf_counter() - t0,
+                            numeric_ops=2 * self.graph.num_edges
+                            * self.workload.spec.n_layers)
+
+    def sync(self) -> InferenceState:
+        return self._state
+
+    @property
+    def state(self) -> InferenceState:
+        return self._state
+
+
+@register_engine("vertexwise", "dnc")
+class VertexWiseAdapter:
+    """Per-target recursive expansion (DNC, paper Fig. 1/8).
+
+    Updates only mutate the graph and input features; embeddings are
+    expanded per target on ``query`` (exact by construction, with all the
+    redundant recomputation the paper quantifies).  ``sync()`` materializes
+    the full layered state via the oracle so hot-swap out of this backend
+    is possible.
+    """
+
+    def __init__(self, workload: Workload, params: list,
+                 graph: DynamicGraph, state: InferenceState):
+        self.workload = workload
+        self.params = params
+        self._params_np = params_to_numpy(params)
+        self.graph = graph
+        self._state = state
+        self._dirty = False
+        self.ops = 0  # cumulative aggregation ops across queries
+
+    def apply_batch(self, batch: UpdateBatch) -> UpdateResult:
+        t0 = time.perf_counter()
+        self.graph.apply_topology(batch.edges)
+        for f in batch.features:
+            self._state.H[0][f.vertex] = np.asarray(f.value, dtype=np.float32)
+        self._dirty = True
+        return UpdateResult(affected=_touched(batch),
+                            wall_seconds=time.perf_counter() - t0)
+
+    def query(self, vertices: np.ndarray) -> np.ndarray:
+        vw = VertexWiseEngine(self.workload, self._params_np, self.graph,
+                              self._state.H[0])
+        out = vw.infer(np.asarray(vertices, dtype=np.int64))
+        self.ops += vw.ops
+        return out
+
+    def sync(self) -> InferenceState:
+        if self._dirty:
+            _materialize_state(self.workload, self.params, self.graph,
+                               self._state)
+            self._dirty = False
+        return self._state
+
+    @property
+    def state(self) -> InferenceState:
+        return self.sync()

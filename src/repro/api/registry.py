@@ -1,0 +1,128 @@
+"""Unified ``Engine`` protocol + engine registry.
+
+The paper's central claim (§4) is a *generalized* incremental programming
+model: one UPDATE/AGGREGATE contract that any execution backend can
+implement.  The seed grew four engines with incompatible constructor
+signatures (NumPy params vs JAX pytrees, ``InferenceState`` vs raw
+features) and hand-wired ``if/elif`` dispatch at every call site.  This
+module is the contract that removes that: every backend is an ``Engine``
+built from one normalized signature
+
+    factory(workload, params, graph, state) -> Engine
+
+where ``params`` is the JAX pytree from ``Workload.init_params`` (adapters
+convert to NumPy/device layouts internally) and ``state`` is the host
+``InferenceState``.  Backends self-register under a short name::
+
+    @register_engine("ripple", "rp")
+    class RippleAdapter: ...
+
+and call sites construct via ``make_engine(name, ...)`` — adding a backend
+(distributed, new kernels) is a registry entry, never another ``elif``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.graph import DynamicGraph, UpdateBatch
+from repro.core.state import InferenceState
+from repro.core.workloads import Workload
+
+
+@dataclass
+class UpdateResult:
+    """Engine-agnostic result of applying one update batch.
+
+    Mirrors the host engines' ``BatchStats`` fields so benchmark code is
+    backend-independent; engines that don't track a field leave it empty.
+    """
+
+    affected: np.ndarray                      # final-hop affected vertex ids
+    wall_seconds: float = 0.0
+    affected_per_hop: list[int] = field(default_factory=list)
+    messages_per_hop: list[int] = field(default_factory=list)
+    numeric_ops: int = 0
+
+    @property
+    def total_affected(self) -> int:
+        if self.affected_per_hop:
+            return int(sum(self.affected_per_hop))
+        return int(self.affected.size)
+
+    # back-compat alias used by benchmark bucketing
+    @property
+    def final_affected(self) -> np.ndarray:
+        return self.affected
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """What every inference backend must provide.
+
+    ``state`` must always be readable; for device-resident backends it may
+    be a cached host mirror — ``sync()`` forces the authoritative download
+    and returns the host ``InferenceState`` (the same object thereafter
+    reflected by ``state``).  Engines may additionally expose
+    ``query(vertices) -> np.ndarray`` for backend-native reads; the session
+    falls back to ``state.H[-1]`` when absent.
+    """
+
+    def apply_batch(self, batch: UpdateBatch) -> UpdateResult: ...
+
+    def sync(self) -> InferenceState: ...
+
+    @property
+    def state(self) -> InferenceState: ...
+
+
+EngineFactory = Callable[[Workload, list, DynamicGraph, InferenceState], Engine]
+
+_REGISTRY: dict[str, EngineFactory] = {}
+_CANONICAL: dict[str, str] = {}  # alias -> canonical name
+
+
+def register_engine(name: str, *aliases: str) -> Callable[[EngineFactory], EngineFactory]:
+    """Class/function decorator registering an engine factory under ``name``
+    (plus optional aliases).  The factory must accept the normalized
+    signature ``(workload, params, graph, state)``."""
+
+    def deco(factory: EngineFactory) -> EngineFactory:
+        for nm in (name, *aliases):
+            key = nm.lower()
+            if key in _REGISTRY:
+                raise ValueError(f"engine {key!r} already registered")
+            _REGISTRY[key] = factory
+            _CANONICAL[key] = name.lower()
+        factory.engine_name = name.lower()  # type: ignore[attr-defined]
+        return factory
+
+    return deco
+
+
+def engine_names(*, canonical_only: bool = True) -> list[str]:
+    """Registered engine names (canonical by default, aliases included
+    otherwise)."""
+    if canonical_only:
+        return sorted(set(_CANONICAL.values()))
+    return sorted(_REGISTRY)
+
+
+def canonical_name(name: str) -> str:
+    key = name.lower()
+    if key not in _CANONICAL:
+        raise KeyError(
+            f"unknown engine {name!r}; registered: {', '.join(engine_names())}")
+    return _CANONICAL[key]
+
+
+def make_engine(name: str, workload: Workload, params: list,
+                graph: DynamicGraph, state: InferenceState) -> Engine:
+    """Construct a registered engine from the normalized signature."""
+    key = name.lower()
+    if key not in _REGISTRY:
+        raise KeyError(
+            f"unknown engine {name!r}; registered: {', '.join(engine_names())}")
+    return _REGISTRY[key](workload, params, graph, state)

@@ -1,0 +1,327 @@
+"""``InferenceSession`` — the one serving API over graph + state + engine.
+
+The paper's deployment shape (§5, §7.3): bootstrap a snapshot, ingest
+streaming updates under a latency deadline, answer embedding/label queries,
+checkpoint for fault tolerance, and pick the execution backend per the
+hardware at hand.  The session owns all of it:
+
+    session = InferenceSession.build(SessionConfig(workload="gc-s",
+                                                   engine="ripple"))
+    report  = session.ingest(session.make_stream(3000), batch_size=100,
+                             deadline_ms=5.0)
+    preds   = session.predict()
+    session.swap_engine("device")          # migrate state mid-stream
+    session.checkpoint(); session.restore()
+
+Engine selection always goes through ``repro.api.registry`` — there is no
+per-engine branching anywhere above this layer.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+import numpy as np
+import jax
+
+from repro.ckpt import CheckpointManager, UpdateJournal
+from repro.core.graph import (DynamicGraph, EdgeUpdate, FeatureUpdate,
+                              UpdateBatch, erdos_renyi, powerlaw_graph)
+from repro.core.state import InferenceState
+from repro.core.workloads import Workload, make_workload
+from repro.data.streams import UpdateStream, make_stream, snapshot_split
+
+from .registry import Engine, UpdateResult, canonical_name, make_engine
+
+_GRAPH_GENS = {"er": erdos_renyi, "powerlaw": powerlaw_graph}
+
+
+@dataclass
+class SessionConfig:
+    """Everything needed to bootstrap a serving session from scratch."""
+
+    workload: str = "gc-s"
+    engine: str = "ripple"
+    graph: str = "powerlaw"          # "er" | "powerlaw"
+    n: int = 2000
+    m: int = 8000
+    n_layers: int = 2
+    d_in: int = 32
+    d_hidden: int = 32
+    n_classes: int = 8
+    holdout_frac: float = 0.1        # edges held out for streaming re-insertion
+    seed: int = 0
+    deadline_ms: float = 0.0         # default ingest latency budget (0 = off)
+    ckpt_dir: str = ""
+    ckpt_every: int = 10
+    ckpt_keep: int = 3
+
+
+@dataclass
+class IngestReport:
+    """Latency/throughput accounting for one ``ingest`` call."""
+
+    n_updates: int = 0
+    n_batches: int = 0
+    wall_seconds: float = 0.0
+    latencies: list[float] = field(default_factory=list)   # per micro-batch, s
+    results: list[UpdateResult] = field(default_factory=list)
+    final_batch_size: int = 0
+
+    @property
+    def throughput(self) -> float:
+        return self.n_updates / max(self.wall_seconds, 1e-12)
+
+    @property
+    def median_latency_ms(self) -> float:
+        return float(np.median(self.latencies)) * 1e3 if self.latencies else 0.0
+
+    @property
+    def p99_latency_ms(self) -> float:
+        return float(np.percentile(self.latencies, 99)) * 1e3 \
+            if self.latencies else 0.0
+
+
+def _flatten(updates) -> list:
+    """Normalize any accepted ingest input to a flat list of updates."""
+    if isinstance(updates, UpdateBatch):
+        return list(updates.edges) + list(updates.features)
+    if isinstance(updates, UpdateStream):
+        return list(updates.updates)
+    if isinstance(updates, (EdgeUpdate, FeatureUpdate)):
+        return [updates]
+    flat: list = []
+    for u in updates:
+        flat.extend(_flatten(u))
+    return flat
+
+
+def _to_batch(chunk: Sequence) -> UpdateBatch:
+    b = UpdateBatch()
+    for u in chunk:
+        (b.edges if isinstance(u, EdgeUpdate) else b.features).append(u)
+    return b
+
+
+class InferenceSession:
+    """Facade owning graph + state + engine with ingest/query/checkpoint."""
+
+    def __init__(self, workload: Workload, params: list, graph: DynamicGraph,
+                 state: InferenceState, engine: str = "ripple", *,
+                 deadline_ms: float = 0.0, ckpt_dir: str = "",
+                 ckpt_every: int = 10, ckpt_keep: int = 3,
+                 holdout=None, seed: int = 0):
+        self.workload = workload
+        self.params = params
+        self.graph = graph
+        self.state = state
+        self.engine_name = canonical_name(engine)
+        self.engine: Engine = make_engine(self.engine_name, workload, params,
+                                          graph, state)
+        self.deadline_ms = deadline_ms
+        self.holdout = holdout
+        self.seed = seed
+        self.step = 0                     # micro-batches applied == journal id
+        self.ckpt_dir = ckpt_dir
+        self._ckpt = CheckpointManager(ckpt_dir, every=ckpt_every,
+                                       keep=ckpt_keep) if ckpt_dir else None
+        self.journal = UpdateJournal(os.path.join(ckpt_dir, "updates.jsonl")) \
+            if ckpt_dir else None
+        if self.journal and self.journal.next_id:
+            # attaching to a dir with an existing journal: keep journal id
+            # == step so future checkpoints' coverage claim stays truthful
+            # (call restore(replay=True) to actually recover that history)
+            self.step = self.journal.next_id
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def build(cls, config: SessionConfig) -> "InferenceSession":
+        """Bootstrap graph, params, and state from a config (synthetic data
+        path; bring-your-own-graph via ``bootstrap``)."""
+        wl = make_workload(config.workload, n_layers=config.n_layers,
+                           d_in=config.d_in, d_hidden=config.d_hidden,
+                           n_classes=config.n_classes)
+        gen = _GRAPH_GENS[config.graph]
+        src, dst, w = gen(config.n, config.m, seed=config.seed,
+                          weighted=wl.spec.weighted)
+        snap, holdout = snapshot_split(src, dst, w, config.holdout_frac,
+                                       seed=config.seed)
+        graph = DynamicGraph(config.n, *snap)
+        rng = np.random.default_rng(config.seed)
+        x = rng.normal(size=(config.n, config.d_in)).astype(np.float32)
+        params = wl.init_params(jax.random.PRNGKey(config.seed))
+        state = InferenceState.bootstrap(wl, params, x, graph)
+        return cls(wl, params, graph, state, config.engine,
+                   deadline_ms=config.deadline_ms, ckpt_dir=config.ckpt_dir,
+                   ckpt_every=config.ckpt_every, ckpt_keep=config.ckpt_keep,
+                   holdout=holdout, seed=config.seed)
+
+    @classmethod
+    def bootstrap(cls, workload: Workload, params: list, x: np.ndarray,
+                  graph: DynamicGraph, engine: str = "ripple",
+                  **opts) -> "InferenceSession":
+        """Bring-your-own graph + features: one full layer-wise pass
+        precomputes all per-layer embeddings, then streaming starts."""
+        state = InferenceState.bootstrap(workload, params, x, graph)
+        return cls(workload, params, graph, state, engine, **opts)
+
+    def make_stream(self, n_updates: int, seed: int = 1,
+                    feature_scale: float = 1.0) -> UpdateStream:
+        """Paper-protocol stream (§7.1.2) from the held-out edge split."""
+        if self.holdout is None:
+            empty = (np.empty(0, np.int64), np.empty(0, np.int64),
+                     np.empty(0, np.float32))
+            holdout = empty
+        else:
+            holdout = self.holdout
+        return make_stream(self.graph, holdout, n_updates,
+                           self.state.H[0].shape[1], seed=seed,
+                           feature_scale=feature_scale)
+
+    # -- ingest -----------------------------------------------------------
+    def ingest(self, updates, *, batch_size: int | None = None,
+               deadline_ms: float | None = None,
+               keep_results: bool = True) -> IngestReport:
+        """Apply updates through the engine with deadline-driven
+        micro-batching (the paper's latency-vs-throughput knob, §7.3).
+
+        ``updates`` may be an ``UpdateBatch``, an ``UpdateStream``, a single
+        update, or any (nested) iterable of these.  When ``deadline_ms`` is
+        set, the micro-batch size halves whenever a batch blows the budget
+        and doubles back (up to the requested size) while comfortably under
+        it.  Every micro-batch is journaled write-ahead and counted in
+        ``self.step`` so checkpoint + replay compose exactly.
+
+        ``keep_results=False`` drops the per-batch ``UpdateResult`` objects
+        (latency floats are always kept) — use it for long-running serving
+        loops where retaining per-batch affected-vertex arrays would grow
+        memory linearly with the stream.
+        """
+        deadline = self.deadline_ms if deadline_ms is None else deadline_ms
+        flat = _flatten(updates)
+        max_bs = batch_size or max(len(flat), 1)
+        bs = max_bs
+        report = IngestReport(final_batch_size=bs)
+        t_start = time.perf_counter()
+        i = 0
+        while i < len(flat):
+            chunk = flat[i:i + bs]
+            i += len(chunk)
+            batch = _to_batch(chunk)
+            if self.journal:
+                self.journal.append(batch)
+            t0 = time.perf_counter()
+            res = self.engine.apply_batch(batch)
+            dt = time.perf_counter() - t0
+            self.step += 1
+            if self._ckpt and self.step % self._ckpt.every == 0:
+                self.checkpoint()
+            report.latencies.append(dt)
+            if keep_results:
+                report.results.append(res)
+            report.n_updates += len(batch)
+            report.n_batches += 1
+            if deadline:
+                if dt * 1e3 > deadline and bs > 1:
+                    bs = max(1, bs // 2)
+                elif dt * 1e3 < deadline / 4 and bs < max_bs:
+                    bs = min(max_bs, bs * 2)
+        report.wall_seconds = time.perf_counter() - t_start
+        report.final_batch_size = bs
+        return report
+
+    # -- query ------------------------------------------------------------
+    def query(self, vertices=None) -> np.ndarray:
+        """Final-layer embeddings for ``vertices`` (all vertices if None)."""
+        if vertices is None:
+            vertices = np.arange(self.graph.n, dtype=np.int64)
+        vertices = np.asarray(vertices, dtype=np.int64)
+        native = getattr(self.engine, "query", None)
+        if native is not None:
+            return np.asarray(native(vertices))
+        return self.engine.state.H[-1][vertices]
+
+    def predict(self, vertices=None) -> np.ndarray:
+        """Class labels (argmax over the final layer)."""
+        return np.argmax(self.query(vertices), axis=-1)
+
+    # -- state management -------------------------------------------------
+    def sync(self) -> InferenceState:
+        """Force the engine's authoritative state back to the host."""
+        self.state = self.engine.sync()
+        return self.state
+
+    def swap_engine(self, name: str) -> Engine:
+        """Hot-swap the execution backend mid-stream.
+
+        Downloads the current engine's state to the host, then constructs
+        the new backend over the *same* graph + state — migration between
+        host (NumPy) and device (jitted) engines is exact because all
+        backends share the (H, S, k) state contract.
+        """
+        name = canonical_name(name)
+        if name == self.engine_name:
+            return self.engine
+        state = self.sync()
+        self.engine = make_engine(name, self.workload, self.params,
+                                  self.graph, state)
+        self.engine_name = name
+        return self.engine
+
+    # -- checkpoint / restore --------------------------------------------
+    def _ckpt_tree(self, *, sync: bool = True) -> dict:
+        """The snapshot pytree.  With ``sync=False`` the leaves are the
+        (possibly stale) host arrays — only the tree *structure* is valid,
+        which is all ``restore_pytree`` needs for its template."""
+        src, dst, w = self.graph.coo()
+        st = self.sync() if sync else self.state
+        return {"H": list(st.H), "S": list(st.S), "k": st.k,
+                "src": src, "dst": dst, "w": w,
+                "step": np.int64(self.step)}
+
+    def checkpoint(self) -> str:
+        """Durably snapshot state + graph at the current step; returns the
+        snapshot directory."""
+        if not self._ckpt:
+            raise RuntimeError("session built without ckpt_dir")
+        return self._ckpt.save(self._ckpt_tree(), self.step)
+
+    def restore(self, step: int | None = None, *, replay: bool = False) -> int:
+        """Restore the latest (or given) committed snapshot; returns the
+        restored step, or -1 when none exists.
+
+        A snapshot at step ``s`` captures state after journal entries
+        ``[0, s)``; with ``replay=True`` the journal entries ``>= s`` are
+        re-applied, reproducing the pre-crash state exactly (RIPPLE updates
+        are deterministic).
+        """
+        if not self._ckpt:
+            raise RuntimeError("session built without ckpt_dir")
+        from repro.ckpt import restore_pytree
+        tree, got = restore_pytree(self._ckpt_tree(sync=False),
+                                   self.ckpt_dir, step)
+        if tree is None:
+            return -1
+        self.graph = DynamicGraph(self.state.n, tree["src"], tree["dst"],
+                                  tree["w"])
+        self.state = InferenceState(
+            H=[np.asarray(h, dtype=np.float32) for h in tree["H"]],
+            S=[np.asarray(s, dtype=np.float32) for s in tree["S"]],
+            k=np.asarray(tree["k"], dtype=np.float32))
+        self.step = int(tree["step"])
+        self.engine = make_engine(self.engine_name, self.workload,
+                                  self.params, self.graph, self.state)
+        if replay and self.journal:
+            for _jid, batch in self.journal.replay(self.step):
+                self.engine.apply_batch(batch)
+                self.step += 1
+        if self.journal:
+            # rewinding without replay rolls back the log tail so the next
+            # append's journal id stays == self.step (exactly-once contract)
+            self.journal.truncate(self.step)
+        # snapshots newer than where we stand describe a discarded future;
+        # a later latest-step restore must not resurrect them
+        self._ckpt.prune_after(self.step)
+        return int(got)

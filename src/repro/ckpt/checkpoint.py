@@ -83,15 +83,31 @@ class CheckpointManager:
         self.every = every
         self.keep = keep
 
+    def save(self, tree, step: int) -> str:
+        """Unconditionally snapshot at ``step`` (with retention gc)."""
+        d = save_pytree(tree, self.path, step)
+        self._gc()
+        return d
+
     def maybe_save(self, tree, step: int) -> bool:
         if step % self.every:
             return False
-        save_pytree(tree, self.path, step)
-        self._gc()
+        self.save(tree, step)
         return True
 
     def restore(self, tree_like):
         return restore_pytree(tree_like, self.path)
+
+    def prune_after(self, step: int) -> None:
+        """Delete snapshots with step > ``step`` (timeline rewind): after
+        restoring an older snapshot, newer ones describe a discarded future
+        and must not be picked up by a later latest-step restore."""
+        if not os.path.isdir(self.path):
+            return
+        for n in os.listdir(self.path):
+            if (n.startswith("step_") and not n.endswith(".tmp")
+                    and int(n.split("_")[1]) > step):
+                shutil.rmtree(os.path.join(self.path, n), ignore_errors=True)
 
     def _gc(self):
         steps = sorted(int(n.split("_")[1]) for n in os.listdir(self.path)

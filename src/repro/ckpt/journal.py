@@ -63,5 +63,28 @@ class UpdateJournal:
                 if rec["id"] >= from_id:
                     yield rec["id"], _decode(rec)
 
+    def truncate(self, n: int) -> None:
+        """Discard entries with id >= n (rollback of the log tail).
+
+        Restoring a snapshot without replay rewinds the timeline; the
+        entries past the snapshot no longer describe the state, and the
+        next append must get id == n to keep checkpoint + replay exact.
+        """
+        if n >= self.next_id:
+            return
+        self._fh.close()
+        with open(self.path) as f:
+            keep = [line for line in f if json.loads(line)["id"] < n]
+        # tmp + atomic rename (same commit protocol as checkpoint.py): a
+        # crash mid-rewrite must never destroy the committed log
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            f.writelines(keep)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.path)
+        self._fh = open(self.path, "a")
+        self.next_id = n
+
     def close(self):
         self._fh.close()

@@ -30,6 +30,8 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.utils import shard_map_compat
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
@@ -267,7 +269,7 @@ def make_ripple_propagate(mesh, workload: Workload, n_local: int,
         del_src=P(dax, None), del_dst=P(dax, None), del_w=P(dax, None))
     csr_spec = DistCSR(col=P(dax, None), w=P(dax, None),
                        start=P(dax, None), length=P(dax, None))
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         local_fn, mesh=mesh,
         in_specs=(tp_param_specs(workload), state_spec_h, state_spec_s,
                   P(dax, None), csr_spec, batch_spec),
@@ -399,7 +401,7 @@ def make_rc_propagate(mesh, workload: Workload, n_local: int,
         del_src=P(dax, None), del_dst=P(dax, None), del_w=P(dax, None))
     csr_spec = DistCSR(col=P(dax, None), w=P(dax, None),
                        start=P(dax, None), length=P(dax, None))
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         local_fn, mesh=mesh,
         in_specs=(tp_param_specs(workload), state_spec_h, state_spec_s,
                   P(dax, None), csr_spec, csr_spec, batch_spec),

@@ -31,6 +31,9 @@ class UpdateStream:
     def __len__(self) -> int:
         return len(self.updates)
 
+    def __iter__(self):
+        return iter(self.updates)
+
 
 def snapshot_split(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
                    holdout_frac: float = 0.1, seed: int = 0):

@@ -5,21 +5,18 @@ touches jax device state (the dry-run must set XLA_FLAGS first).
 """
 from __future__ import annotations
 
-import jax
+from repro.utils import make_mesh_compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many devices exist (tests / CPU runs)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((data, model), ("data", "model"))
 
 
 # Hardware constants for the roofline (TPU v5e per chip)

@@ -1,9 +1,10 @@
 """Streaming-inference driver: the production serving loop for RIPPLE.
 
-Wires together: graph snapshot -> bootstrap -> journaled update batches ->
-incremental engine -> trigger notifications; with checkpoint/restart,
-straggler mitigation (deadline-based batch splitting), and elastic
-repartitioning hooks.
+A thin CLI over ``repro.api.InferenceSession``: graph snapshot -> bootstrap
+-> journaled update batches -> incremental engine -> latency report; with
+checkpoint/restart and deadline-driven micro-batching (straggler
+mitigation).  Engine selection goes through the registry — any registered
+backend name works, no per-engine wiring here.
 
     PYTHONPATH=src python -m repro.launch.stream --workload gc-s --n 2000 \
         --updates 3000 --batch-size 100 --engine ripple
@@ -11,46 +12,23 @@ repartitioning hooks.
 from __future__ import annotations
 
 import argparse
-import os
-import time
 
-import numpy as np
-import jax
-
-from repro.core import (DynamicGraph, InferenceState, RecomputeEngine,
-                        RippleEngine, erdos_renyi, make_workload,
-                        params_to_numpy, powerlaw_graph)
-from repro.core.device_engine import DeviceEngine
-from repro.data.streams import make_stream, snapshot_split
-from repro.ckpt import CheckpointManager, UpdateJournal
+from repro.api import InferenceSession, SessionConfig, engine_names
 
 
-def build(args):
-    gen = powerlaw_graph if args.graph == "powerlaw" else erdos_renyi
-    wl = make_workload(args.workload, n_layers=args.layers, d_in=args.d_in,
-                       d_hidden=args.d_hidden, n_classes=args.classes)
-    src, dst, w = gen(args.n, args.m, seed=0, weighted=wl.spec.weighted)
-    (snap, holdout) = snapshot_split(src, dst, w, 0.1, seed=0)
-    g = DynamicGraph(args.n, *snap)
-    rng = np.random.default_rng(0)
-    x = rng.normal(size=(args.n, args.d_in)).astype(np.float32)
-    params = wl.init_params(jax.random.PRNGKey(0))
-    state = InferenceState.bootstrap(wl, params, x, g)
-    stream = make_stream(g, holdout, args.updates, args.d_in, seed=1)
-    if args.engine == "ripple":
-        eng = RippleEngine(wl, params_to_numpy(params), g, state)
-    elif args.engine == "rc":
-        eng = RecomputeEngine(wl, params_to_numpy(params), g, state)
-    else:
-        eng = DeviceEngine(wl, params, g, state)
-    return wl, g, state, eng, stream
+def build(args) -> InferenceSession:
+    return InferenceSession.build(SessionConfig(
+        workload=args.workload, engine=args.engine, graph=args.graph,
+        n=args.n, m=args.m, n_layers=args.layers, d_in=args.d_in,
+        d_hidden=args.d_hidden, n_classes=args.classes,
+        deadline_ms=args.deadline_ms, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every))
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="gc-s")
-    ap.add_argument("--engine", choices=["ripple", "rc", "device"],
-                    default="ripple")
+    ap.add_argument("--engine", choices=engine_names(), default="ripple")
     ap.add_argument("--graph", choices=["er", "powerlaw"], default="powerlaw")
     ap.add_argument("--n", type=int, default=2000)
     ap.add_argument("--m", type=int, default=8000)
@@ -67,33 +45,15 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=10)
     args = ap.parse_args()
 
-    wl, g, state, eng, stream = build(args)
-    journal = ckpt = None
-    if args.ckpt_dir:
-        journal = UpdateJournal(os.path.join(args.ckpt_dir, "updates.jsonl"))
-        ckpt = CheckpointManager(args.ckpt_dir, every=args.ckpt_every)
-
-    lat, n_done, t0 = [], 0, time.perf_counter()
-    batch_size = args.batch_size
-    for i, batch in enumerate(stream.batches(batch_size)):
-        if journal:
-            journal.append(batch)
-        t = time.perf_counter()
-        stats = eng.apply_batch(batch)
-        dt = time.perf_counter() - t
-        lat.append(dt)
-        n_done += len(batch)
-        if ckpt:
-            ckpt.maybe_save({"H": state.H, "S": state.S, "k": state.k}, i)
-        # straggler mitigation: halve the batch if we blow the deadline
-        if args.deadline_ms and dt * 1e3 > args.deadline_ms and batch_size > 1:
-            batch_size = max(1, batch_size // 2)
-    wall = time.perf_counter() - t0
-    lat_ms = np.array(lat) * 1e3
-    print(f"engine={args.engine} workload={args.workload} "
-          f"updates={n_done} throughput={n_done / wall:.1f} up/s "
-          f"median_latency={np.median(lat_ms):.2f}ms "
-          f"p99={np.percentile(lat_ms, 99):.2f}ms")
+    session = build(args)
+    stream = session.make_stream(args.updates, seed=1)
+    report = session.ingest(stream, batch_size=args.batch_size,
+                            keep_results=False)
+    print(f"engine={session.engine_name} workload={args.workload} "
+          f"updates={report.n_updates} throughput={report.throughput:.1f} up/s "
+          f"median_latency={report.median_latency_ms:.2f}ms "
+          f"p99={report.p99_latency_ms:.2f}ms "
+          f"final_batch_size={report.final_batch_size}")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,8 @@ from typing import NamedTuple
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+from repro.utils import shard_map_compat
 from jax.sharding import PartitionSpec as P
 
 from repro.models.gnn.common import (cosine_cutoff, gaussian_rbf, init_mlp,
@@ -105,7 +107,7 @@ def make_partitioned_schnet(mesh, *, n_local: int, e_cap: int, halo_cap: int,
     edge_spec = PartEdges(src_local=P(data_axes, None),
                           dst_global=P(data_axes, None),
                           dist=P(data_axes, None), mask=P(data_axes, None))
-    loss_sharded = jax.shard_map(
+    loss_sharded = shard_map_compat(
         local_loss, mesh=mesh,
         in_specs=(P(),  # params replicated (pytree-prefix spec)
                   P(data_axes, None, None), edge_spec, P(data_axes, None)),
@@ -182,7 +184,7 @@ def make_partitioned_schnet_v2(mesh, *, n_local: int, cap2: int, d_in: int,
                             dst_local=P(data_axes, None, None),
                             dist=P(data_axes, None, None),
                             mask=P(data_axes, None, None))
-    loss_sharded = jax.shard_map(
+    loss_sharded = shard_map_compat(
         local_loss, mesh=mesh,
         in_specs=(P(), P(data_axes, None, None), edge_spec,
                   P(data_axes, None)),

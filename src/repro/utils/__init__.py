@@ -27,6 +27,36 @@ def pad_to(arr: np.ndarray, size: int, fill=0) -> np.ndarray:
     return np.pad(arr, pad_width, constant_values=fill)
 
 
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` across jax versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist in newer releases; older ones
+    default to Auto axes anyway."""
+    import jax
+
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax exposes it at the top level with ``check_vma``; older
+    releases have ``jax.experimental.shard_map.shard_map`` with the same
+    positional contract and the flag spelled ``check_rep``.
+    """
+    import jax
+
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check_vma)
+
+
 def human_bytes(n: float) -> str:
     for unit in ("B", "KiB", "MiB", "GiB", "TiB", "PiB"):
         if abs(n) < 1024.0:

@@ -32,8 +32,8 @@ def run(mode: str, name: str) -> None:
     x = rng.normal(size=(n, 8)).astype(np.float32)
     params = wl.init_params(jax.random.PRNGKey(0))
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.utils import make_mesh_compat
+    mesh = make_mesh_compat((4, 2), ("data", "model"))
     eng = DistEngine(wl, params, x, g, mesh, mode=mode)
     # reference graph mirrors updates in ORIGINAL id space
     g_ref = DynamicGraph(n, src, dst, w)

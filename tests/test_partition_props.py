@@ -1,15 +1,22 @@
-"""Property tests: partitioner invariants + graph-store consistency."""
+"""Property tests: partitioner invariants + graph-store consistency.
+
+``hypothesis`` is optional — without it the property-based cases are
+skipped; the deterministic cut-quality case still runs (seeded fallbacks
+for the invariants live in the property bodies via fixed draws)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core.graph import DynamicGraph, erdos_renyi
 from repro.core.partition import edge_cut, ldg_partition
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
-@settings(max_examples=20, deadline=None)
-@given(n=st.integers(10, 80), parts=st.sampled_from([2, 4, 8]),
-       seed=st.integers(0, 5))
-def test_partition_invariants(n, parts, seed):
+
+def _check_partition_invariants(n, parts, seed):
     src, dst, _ = erdos_renyi(n, 4 * n, seed=seed)
     p = ldg_partition(n, src, dst, parts, seed=seed)
     # every vertex assigned
@@ -22,6 +29,19 @@ def test_partition_invariants(n, parts, seed):
     back = p.old_of_new[p.new_of_old]
     np.testing.assert_array_equal(back, np.arange(n))
     np.testing.assert_array_equal(p.new_of_old // p.n_local, p.part_of)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(10, 80), parts=st.sampled_from([2, 4, 8]),
+           seed=st.integers(0, 5))
+    def test_partition_invariants(n, parts, seed):
+        _check_partition_invariants(n, parts, seed)
+else:
+    @pytest.mark.parametrize("n,parts,seed",
+                             [(10, 2, 0), (40, 4, 1), (80, 8, 5)])
+    def test_partition_invariants(n, parts, seed):
+        _check_partition_invariants(n, parts, seed)
 
 
 def test_partition_cuts_beat_random():
@@ -42,11 +62,7 @@ def test_partition_cuts_beat_random():
     assert cut < rand_cut
 
 
-@settings(max_examples=20, deadline=None)
-@given(n=st.integers(5, 30), seed=st.integers(0, 10))
-def test_graph_store_consistency(n, seed):
-    """out-CSR, in-CSR, degree and edge-set stay mutually consistent under
-    arbitrary add/delete sequences."""
+def _check_graph_store_consistency(n, seed):
     rng = np.random.default_rng(seed)
     src, dst, w = erdos_renyi(n, 2 * n, seed=seed)
     g = DynamicGraph(n, src, dst, w)
@@ -67,3 +83,16 @@ def test_graph_store_consistency(n, seed):
     pairs_in = {(int(ic[j]), int(v)) for v in range(n)
                 for j in range(ip[v], ip[v + 1])}
     assert pairs_in == g._edge_set
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(5, 30), seed=st.integers(0, 10))
+    def test_graph_store_consistency(n, seed):
+        """out-CSR, in-CSR, degree and edge-set stay mutually consistent
+        under arbitrary add/delete sequences."""
+        _check_graph_store_consistency(n, seed)
+else:
+    @pytest.mark.parametrize("n,seed", [(5, 0), (16, 3), (30, 10)])
+    def test_graph_store_consistency(n, seed):
+        _check_graph_store_consistency(n, seed)

@@ -1,0 +1,211 @@
+"""The unified serving API: registry construction, oracle exactness of the
+session round-trip for every workload, checkpoint/restore, and engine
+hot-swap mid-stream."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import (InferenceSession, SessionConfig, engine_names,
+                       make_engine)
+from repro.core import (DynamicGraph, InferenceState, WORKLOAD_NAMES,
+                        erdos_renyi, full_inference, make_workload)
+
+ATOL = 2e-3
+RTOL = 2e-3
+
+
+def _small_cfg(workload, engine, **over):
+    base = dict(workload=workload, engine=engine, graph="er", n=40, m=160,
+                d_in=8, d_hidden=12, n_classes=5, seed=0)
+    base.update(over)
+    return SessionConfig(**base)
+
+
+def _oracle_H(session):
+    st = session.sync()
+    H, _ = full_inference(session.workload, session.params,
+                          jax.numpy.asarray(st.H[0]), *session.graph.coo(),
+                          session.graph.in_degree)
+    return [np.asarray(h) for h in H]
+
+
+def _assert_session_exact(session):
+    H_ref = _oracle_H(session)
+    st = session.state
+    for l, (h, href) in enumerate(zip(st.H, H_ref)):
+        np.testing.assert_allclose(h, href, atol=ATOL, rtol=RTOL,
+                                   err_msg=f"layer {l} mismatch")
+    np.testing.assert_allclose(session.query(), H_ref[-1], atol=ATOL,
+                               rtol=RTOL)
+
+
+# -- registry ---------------------------------------------------------------
+def test_registry_has_all_backends():
+    assert {"ripple", "rc", "device", "vertexwise", "full"} <= set(engine_names())
+
+
+def test_registry_unknown_engine_raises():
+    wl = make_workload("gc-s", n_layers=2, d_in=4, d_hidden=4, n_classes=2)
+    with pytest.raises(KeyError, match="ripple"):
+        make_engine("nope", wl, [], None, None)
+
+
+def test_registry_aliases_resolve():
+    s = InferenceSession.build(_small_cfg("gc-s", "rp"))
+    assert s.engine_name == "ripple"
+
+
+# -- session round-trip == oracle, all five workloads -----------------------
+@pytest.mark.parametrize("name", WORKLOAD_NAMES)
+@pytest.mark.parametrize("engine", ["ripple", "rc", "full"])
+def test_session_roundtrip_matches_oracle(name, engine):
+    s = InferenceSession.build(_small_cfg(name, engine))
+    s.ingest(s.make_stream(30, seed=1), batch_size=6)
+    _assert_session_exact(s)
+
+
+@pytest.mark.parametrize("name", WORKLOAD_NAMES)
+def test_session_device_engine_matches_oracle(name):
+    s = InferenceSession.build(_small_cfg(name, "device"))
+    s.ingest(s.make_stream(12, seed=1), batch_size=4)
+    _assert_session_exact(s)
+
+
+def test_vertexwise_query_matches_oracle():
+    s = InferenceSession.build(_small_cfg("gc-m", "vertexwise"))
+    s.ingest(s.make_stream(12, seed=1), batch_size=4)
+    H_ref = _oracle_H(s)
+    targets = np.arange(10)
+    np.testing.assert_allclose(s.query(targets), H_ref[-1][targets],
+                               atol=ATOL, rtol=RTOL)
+
+
+# -- deadline-driven micro-batching ----------------------------------------
+def test_deadline_splits_batches():
+    s = InferenceSession.build(_small_cfg("gc-s", "ripple"))
+    stream = s.make_stream(40, seed=1)
+    # an impossible budget forces the batch size down to 1
+    report = s.ingest(stream, batch_size=16, deadline_ms=1e-6)
+    assert report.final_batch_size == 1
+    assert report.n_batches > 40 // 16
+    assert report.n_updates == len(stream)
+    _assert_session_exact(s)
+
+
+# -- checkpoint / restore ---------------------------------------------------
+def test_checkpoint_restore_roundtrip(tmp_path):
+    s = InferenceSession.build(_small_cfg("gs-s", "ripple",
+                                          ckpt_dir=str(tmp_path),
+                                          ckpt_every=10_000))
+    updates = list(s.make_stream(40, seed=1))
+    s.ingest(updates[:20], batch_size=5)
+    s.checkpoint()
+    step_at_ckpt = s.step
+    H_at_ckpt = [h.copy() for h in s.sync().H]
+    coo_at_ckpt = s.graph.coo()
+
+    s.ingest(updates[20:], batch_size=5)
+    assert s.step > step_at_ckpt
+
+    got = s.restore()
+    assert got == step_at_ckpt == s.step
+    for h, href in zip(s.state.H, H_at_ckpt):
+        np.testing.assert_array_equal(h, href)
+    for a, b in zip(s.graph.coo(), coo_at_ckpt):
+        np.testing.assert_array_equal(a, b)
+    # the restored session keeps serving exactly
+    s.ingest(updates[20:], batch_size=5)
+    _assert_session_exact(s)
+
+
+def test_restore_with_journal_replay_reaches_tip(tmp_path):
+    s = InferenceSession.build(_small_cfg("gc-s", "ripple",
+                                          ckpt_dir=str(tmp_path),
+                                          ckpt_every=10_000))
+    updates = list(s.make_stream(30, seed=1))
+    s.ingest(updates[:15], batch_size=5)
+    s.checkpoint()
+    s.ingest(updates[15:], batch_size=5)
+    tip_step = s.step
+    H_tip = [h.copy() for h in s.sync().H]
+
+    s.restore(replay=True)
+    assert s.step == tip_step
+    for h, href in zip(s.sync().H, H_tip):
+        np.testing.assert_allclose(h, href, atol=1e-6, rtol=1e-6)
+
+
+def test_restore_without_replay_rolls_back_journal(tmp_path):
+    """Rewinding without replay must truncate the log tail: ingesting a new
+    timeline and then crash-recovering may not double-apply stale entries."""
+    s = InferenceSession.build(_small_cfg("gc-s", "ripple",
+                                          ckpt_dir=str(tmp_path),
+                                          ckpt_every=10_000))
+    updates = list(s.make_stream(30, seed=1))
+    s.ingest(updates[:10], batch_size=5)
+    s.checkpoint()
+    s.ingest(updates[10:20], batch_size=5)   # journaled, then rolled back
+    s.restore()                              # no replay: timeline rewinds
+    assert s.journal.next_id == s.step == 2
+    s.ingest(updates[20:], batch_size=5)     # new timeline, ids 2..3
+    tip = [h.copy() for h in s.sync().H]
+    got = s.restore(replay=True)             # crash recovery over new log
+    assert got == 2 and s.step == 4
+    for h, href in zip(s.sync().H, tip):
+        np.testing.assert_allclose(h, href, atol=1e-6, rtol=1e-6)
+
+
+def test_restore_older_step_prunes_newer_snapshots(tmp_path):
+    """Restoring an explicitly older snapshot discards newer snapshots: a
+    later latest-step restore must not resurrect the abandoned future."""
+    s = InferenceSession.build(_small_cfg("gc-s", "ripple",
+                                          ckpt_dir=str(tmp_path),
+                                          ckpt_every=10_000))
+    updates = list(s.make_stream(20, seed=1))
+    s.ingest(updates[:10], batch_size=5)
+    s.checkpoint()                            # snapshot at step 2
+    s.ingest(updates[10:], batch_size=5)
+    s.checkpoint()                            # snapshot at step 4
+    assert s.restore(step=2) == 2
+    assert s.journal.next_id == s.step == 2
+    assert s.restore() == 2                   # latest is now the rewound step
+    assert s.step == 2
+
+
+# -- engine hot-swap --------------------------------------------------------
+def test_hot_swap_ripple_to_device_equivalence():
+    """ripple -> device mid-stream must equal never swapping at all."""
+    cfg = _small_cfg("gs-s", "ripple")
+    a = InferenceSession.build(cfg)
+    b = InferenceSession.build(cfg)
+    updates = list(a.make_stream(24, seed=1))
+    updates_b = list(b.make_stream(24, seed=1))
+
+    a.ingest(updates, batch_size=4)
+
+    b.ingest(updates_b[:12], batch_size=4)
+    b.swap_engine("device")
+    assert b.engine_name == "device"
+    b.ingest(updates_b[12:], batch_size=4)
+
+    for h_a, h_b in zip(a.sync().H, b.sync().H):
+        np.testing.assert_allclose(h_a, h_b, atol=ATOL, rtol=RTOL)
+    _assert_session_exact(b)
+
+
+def test_hot_swap_device_back_to_host():
+    s = InferenceSession.build(_small_cfg("gc-m", "device"))
+    updates = list(s.make_stream(18, seed=1))
+    s.ingest(updates[:6], batch_size=3)
+    s.swap_engine("ripple")
+    s.ingest(updates[6:12], batch_size=3)
+    s.swap_engine("rc")
+    s.ingest(updates[12:], batch_size=3)
+    _assert_session_exact(s)
+
+
+def test_swap_to_same_engine_is_noop():
+    s = InferenceSession.build(_small_cfg("gc-s", "ripple"))
+    eng = s.engine
+    assert s.swap_engine("rp") is eng
