@@ -1,66 +1,85 @@
 """Distributed RP-vs-RC benchmark (paper Figs 12/13) on 8 virtual devices.
 
-Measures per-batch wall time and exchanged message slots (the engines count
-them in-jit) for RIPPLE vs pull-based RC across partition counts — the
-paper's throughput and comm-cost scaling study, scaled to CPU.
+Measures per-batch wall time, host routing time (the incremental
+partitioned-CSR maintenance — formerly a full stacked-CSR rebuild per
+batch), and exchanged message slots for RIPPLE vs pull-based RC across
+partition counts — the paper's throughput and comm-cost scaling study,
+scaled to CPU.  Everything runs through ``InferenceSession`` with the
+``dist`` / ``dist-rc`` registry backends.
+
+Besides the human-readable fig12 lines, writes ``BENCH_dist.json`` at the
+repo root: per (partition count, mode) median latency, updates/sec, comm
+slots, and host routing time — the machine-readable perf trajectory.
 """
+import json
 import os
 import sys
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import time  # noqa: E402
-
 import numpy as np  # noqa: E402
-import jax  # noqa: E402
 
-from repro.core import DynamicGraph, erdos_renyi, make_workload  # noqa: E402
-from repro.core.dist_host import DistEngine  # noqa: E402
-from repro.data.streams import make_stream, snapshot_split  # noqa: E402
+from repro.api import InferenceSession, SessionConfig  # noqa: E402
+from repro.utils import make_mesh_compat  # noqa: E402
 
 D = 64
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_dist.json")
 
 
 def run(parts: int, mode: str, n=1500, m=30000, batch=100, n_updates=600):
-    wl = make_workload("gc-s", n_layers=3, d_in=D, d_hidden=D, n_classes=16)
-    src, dst, w = erdos_renyi(n, m, seed=0)
-    snap, holdout = snapshot_split(src, dst, w, 0.1, seed=0)
-    g = DynamicGraph(n, *snap)
-    rng = np.random.default_rng(0)
-    x = rng.normal(size=(n, D)).astype(np.float32)
-    params = wl.init_params(jax.random.PRNGKey(0))
-    from repro.utils import make_mesh_compat
     mesh = make_mesh_compat((parts, 8 // parts), ("data", "model"))
-    eng = DistEngine(wl, params, x, g, mesh, mode=mode)
-    stream = make_stream(g, holdout, n_updates, D, seed=1)
+    engine = "dist" if mode == "ripple" else "dist-rc"
+    session = InferenceSession.build(SessionConfig(
+        workload="gc-s", engine=engine, engine_options={"mesh": mesh},
+        graph="er", n=n, m=m, n_layers=3, d_in=D, d_hidden=D, n_classes=16,
+        seed=0))
+    stream = session.make_stream(n_updates, seed=1)
 
-    comm, lat = [], []
+    comm, lat, host = [], [], []
     first = True
     for b in stream.batches(batch):
-        t0 = time.perf_counter()
-        eng.apply_batch(b)
-        dt = time.perf_counter() - t0
+        rep = session.ingest(b)
         if not first:       # skip compile batch
-            lat.append(dt)
-            comm.append(eng.last_comm.sum())
+            lat.append(rep.latencies[0])
+            comm.append(sum(rep.results[0].messages_per_hop))
+            host.append(session.engine.impl.last_host_seconds)
         first = False
     thr = n_updates / max(sum(lat), 1e-9)
+    csr = session.engine.impl.out_csr
     print(f"fig12/{mode}/p{parts},{np.median(lat) * 1e6:.1f},"
           f"throughput={thr:.0f}ups comm_slots={np.mean(comm):.0f} "
-          f"comm_bytes~={np.mean(comm) * D * 4:.0f}", flush=True)
-    return np.mean(comm)
+          f"comm_bytes~={np.mean(comm) * D * 4:.0f} "
+          f"host_us={np.median(host) * 1e6:.0f} "
+          f"csr_rebuilds={csr.rebuilds}", flush=True)
+    return {"parts": parts, "mode": mode,
+            "median_latency_s": float(np.median(lat)),
+            "updates_per_sec": float(thr),
+            "mean_comm_slots": float(np.mean(comm)),
+            "median_host_seconds": float(np.median(host)),
+            "csr_rebuilds": int(csr.rebuilds),
+            "csr_row_refreshes": int(csr.row_refreshes)}
 
 
 def main():
-    comm = {}
+    records = []
     for parts in (2, 4, 8):
         for mode in ("ripple", "rc"):
-            comm[(parts, mode)] = run(parts, mode)
+            records.append(run(parts, mode))
+    by = {(r["parts"], r["mode"]): r for r in records}
+    reduction = {}
     for parts in (2, 4, 8):
-        ratio = comm[(parts, "rc")] / max(comm[(parts, "ripple")], 1e-9)
+        ratio = by[(parts, "rc")]["mean_comm_slots"] \
+            / max(by[(parts, "ripple")]["mean_comm_slots"], 1e-9)
+        reduction[str(parts)] = ratio
         print(f"fig12/comm-reduction/p{parts},0.0,rc_over_rp={ratio:.1f}x",
               flush=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump({"bench": "dist", "workload": "gc-s", "n": 1500,
+                   "m": 30000, "batch": 100, "n_updates": 600, "d": D,
+                   "results": records,
+                   "comm_reduction_rc_over_rp": reduction}, f, indent=2)
+    print(f"wrote {os.path.relpath(OUT_PATH)}", flush=True)
 
 
 if __name__ == "__main__":

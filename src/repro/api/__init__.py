@@ -2,8 +2,10 @@
 # execution backend, and the InferenceSession facade (ingest / query /
 # checkpoint / hot-swap).  Importing this package registers all built-in
 # engines.
-from .registry import (Engine, UpdateResult, canonical_name,  # noqa: F401
-                       engine_names, make_engine, register_engine)
-from . import engines  # noqa: F401  (registers ripple/rc/device/vertexwise/full)
+from .registry import (Engine, EngineOption, UpdateResult,  # noqa: F401
+                       canonical_name, engine_names, engine_options,
+                       make_engine, normalize_options, register_engine)
+from . import engines  # noqa: F401  (registers ripple/rc/device/
+#                                     vertexwise/full/dist/dist-rc)
 from .session import (InferenceSession, IngestReport,  # noqa: F401
                       SessionConfig)

@@ -16,6 +16,9 @@ Registered backends:
                 computed on query
     full        from-scratch layer-wise inference over the whole graph on
                 every batch (the exactness oracle as an engine)
+    dist        distributed incremental RIPPLE over a (data, model) device
+                mesh (paper §5) — declares mesh/mode/data_axes options
+    dist-rc     the pull-based distributed recompute baseline (paper fig 12)
 """
 from __future__ import annotations
 
@@ -25,14 +28,16 @@ import numpy as np
 
 from repro.core.engine import RecomputeEngine, RippleEngine
 from repro.core.device_engine import DeviceEngine
+from repro.core.dist_host import DistEngine
 from repro.core.full import full_inference
 from repro.core.graph import DynamicGraph, UpdateBatch
 from repro.core.state import InferenceState, params_to_numpy
 from repro.core.vertexwise import VertexWiseEngine
 from repro.core.workloads import Workload
 
-from .registry import UpdateResult, register_engine
+from .registry import EngineOption, UpdateResult, register_engine
 
+import jax
 import jax.numpy as jnp
 
 
@@ -107,6 +112,9 @@ class DeviceAdapter:
     def apply_batch(self, batch: UpdateBatch) -> UpdateResult:
         t0 = time.perf_counter()
         affected = self._impl.apply_batch(batch)
+        # async dispatch: without blocking on the updated device state the
+        # clock stops before XLA finishes, under-reporting device latency
+        jax.block_until_ready((self._impl.state.H, self._impl.state.S))
         return UpdateResult(affected=affected,
                             wall_seconds=time.perf_counter() - t0,
                             affected_per_hop=[int(affected.size)])
@@ -207,3 +215,88 @@ class VertexWiseAdapter:
     @property
     def state(self) -> InferenceState:
         return self.sync()
+
+
+_DIST_OPTIONS = (
+    EngineOption("mesh", None,
+                 "jax device mesh with a 'model' axis plus the data axes; "
+                 "None = all local devices on one 'data' axis (model=1)"),
+    EngineOption("data_axes", ("data",),
+                 "mesh axes the vertex partition spans — ('pod', 'data') "
+                 "reaches the multi-pod geometry from launch/mesh.py"),
+    EngineOption("seed", 0, "LDG partitioner seed"),
+    EngineOption("min_bucket", 32, "smallest static buffer capacity"),
+)
+
+
+@register_engine("dist", "distributed",
+                 options=_DIST_OPTIONS + (
+                     EngineOption("mode", "ripple",
+                                  "'ripple' (incremental) or 'rc' "
+                                  "(pull-based recompute baseline)"),))
+class DistAdapter:
+    """Distributed RIPPLE over a device mesh (paper §5) as a session backend.
+
+    Entry migration scatters the host ``InferenceState`` onto the mesh
+    (re-partition + relabel, no recomputation); ``sync()`` gathers the
+    authoritative mesh state back into the same host arrays in original
+    vertex-id order — so ``swap_engine`` host<->mesh is exact.  The session
+    graph stays authoritative on the host: the engine mirrors every
+    effective update into its relabeled copy during routing.
+    """
+
+    def __init__(self, workload: Workload, params: list,
+                 graph: DynamicGraph, state: InferenceState, *,
+                 mesh=None, mode: str = "ripple",
+                 data_axes: tuple = ("data",), seed: int = 0,
+                 min_bucket: int = 32):
+        if mesh is None:
+            from repro.launch.mesh import make_local_mesh
+            mesh = make_local_mesh(data=jax.device_count(), model=1)
+        self._host = state
+        self._impl = DistEngine(workload, params, graph, state, mesh,
+                                mode=mode, data_axes=tuple(data_axes),
+                                seed=seed, min_bucket=min_bucket)
+
+    def apply_batch(self, batch: UpdateBatch) -> UpdateResult:
+        t0 = time.perf_counter()
+        affected = self._impl.apply_batch(batch)  # blocks on mesh state
+        return UpdateResult(
+            affected=affected,
+            wall_seconds=time.perf_counter() - t0,
+            messages_per_hop=[int(c) for c in self._impl.last_comm])
+
+    def sync(self) -> InferenceState:
+        return self._impl.gather_state(self._host)
+
+    @property
+    def state(self) -> InferenceState:
+        return self.sync()
+
+    def query(self, vertices: np.ndarray) -> np.ndarray:
+        """Backend-native read: final-layer rows without a full gather."""
+        return self._impl.query(vertices)
+
+    @property
+    def ckpt_shards(self) -> int:
+        """Data-shard count for the per-shard checkpoint layout."""
+        return self._impl.n_parts
+
+    @property
+    def impl(self) -> DistEngine:
+        """The underlying engine (comm counters, CSR stats) for benches."""
+        return self._impl
+
+
+@register_engine("dist-rc", "dist-recompute", options=_DIST_OPTIONS)
+class DistRCAdapter(DistAdapter):
+    """Distributed pull-based recompute baseline (paper fig 12) — ``dist``
+    with the mode pinned to 'rc'."""
+
+    def __init__(self, workload: Workload, params: list,
+                 graph: DynamicGraph, state: InferenceState, *,
+                 mesh=None, data_axes: tuple = ("data",), seed: int = 0,
+                 min_bucket: int = 32):
+        super().__init__(workload, params, graph, state, mesh=mesh,
+                         mode="rc", data_axes=data_axes, seed=seed,
+                         min_bucket=min_bucket)

@@ -19,6 +19,21 @@ convert to NumPy/device layouts internally) and ``state`` is the host
 
 and call sites construct via ``make_engine(name, ...)`` — adding a backend
 (distributed, new kernels) is a registry entry, never another ``elif``.
+
+Backends that need more than the normalized four (a device mesh, a
+partitioning seed, ...) *declare* those extras as ``EngineOption`` entries
+at registration time::
+
+    @register_engine("dist", options=(EngineOption("mesh", None, "..."),))
+    class DistAdapter: ...
+
+``make_engine(name, workload, params, graph, state, **options)`` validates
+the keyword options against the declaration — unknown options raise
+``TypeError`` naming what the engine accepts, and declared-but-omitted
+options are filled from their defaults, so every factory always receives
+its full normalized keyword set.  Engines with no declaration accept no
+options, which is how ``mesh=...`` can exist for ``dist`` without leaking
+into the five single-machine backends.
 """
 from __future__ import annotations
 
@@ -80,14 +95,27 @@ class Engine(Protocol):
 
 EngineFactory = Callable[[Workload, list, DynamicGraph, InferenceState], Engine]
 
+
+@dataclass(frozen=True)
+class EngineOption:
+    """One declared per-engine constructor option (name, default, doc)."""
+
+    name: str
+    default: object = None
+    doc: str = ""
+
+
 _REGISTRY: dict[str, EngineFactory] = {}
 _CANONICAL: dict[str, str] = {}  # alias -> canonical name
+_OPTIONS: dict[str, dict[str, EngineOption]] = {}  # canonical -> declaration
 
 
-def register_engine(name: str, *aliases: str) -> Callable[[EngineFactory], EngineFactory]:
+def register_engine(name: str, *aliases: str,
+                    options: tuple[EngineOption, ...] = ()
+                    ) -> Callable[[EngineFactory], EngineFactory]:
     """Class/function decorator registering an engine factory under ``name``
     (plus optional aliases).  The factory must accept the normalized
-    signature ``(workload, params, graph, state)``."""
+    signature ``(workload, params, graph, state, **declared_options)``."""
 
     def deco(factory: EngineFactory) -> EngineFactory:
         for nm in (name, *aliases):
@@ -96,6 +124,7 @@ def register_engine(name: str, *aliases: str) -> Callable[[EngineFactory], Engin
                 raise ValueError(f"engine {key!r} already registered")
             _REGISTRY[key] = factory
             _CANONICAL[key] = name.lower()
+        _OPTIONS[name.lower()] = {o.name: o for o in options}
         factory.engine_name = name.lower()  # type: ignore[attr-defined]
         return factory
 
@@ -118,11 +147,39 @@ def canonical_name(name: str) -> str:
     return _CANONICAL[key]
 
 
+def engine_options(name: str) -> dict[str, EngineOption]:
+    """The option declaration for ``name`` (empty for option-less engines)."""
+    return dict(_OPTIONS[canonical_name(name)])
+
+
+def normalize_options(name: str, options: dict) -> dict:
+    """Validate ``options`` against ``name``'s declaration and fill defaults.
+
+    Unknown options raise ``TypeError`` naming what the engine accepts;
+    the result always contains every declared option.
+    """
+    decl = _OPTIONS[canonical_name(name)]
+    unknown = sorted(set(options) - set(decl))
+    if unknown:
+        accepted = ", ".join(sorted(decl)) if decl else "none"
+        raise TypeError(
+            f"engine {canonical_name(name)!r} does not accept option(s) "
+            f"{unknown}; accepted: {accepted}")
+    full = {nm: o.default for nm, o in decl.items()}
+    full.update(options)
+    return full
+
+
 def make_engine(name: str, workload: Workload, params: list,
-                graph: DynamicGraph, state: InferenceState) -> Engine:
-    """Construct a registered engine from the normalized signature."""
+                graph: DynamicGraph, state: InferenceState,
+                **options) -> Engine:
+    """Construct a registered engine from the normalized signature.
+
+    ``options`` must be a subset of the engine's declared ``EngineOption``
+    set; omitted options are filled from their declared defaults."""
     key = name.lower()
     if key not in _REGISTRY:
         raise KeyError(
             f"unknown engine {name!r}; registered: {', '.join(engine_names())}")
-    return _REGISTRY[key](workload, params, graph, state)
+    return _REGISTRY[key](workload, params, graph, state,
+                          **normalize_options(key, options))

@@ -44,6 +44,7 @@ class SessionConfig:
 
     workload: str = "gc-s"
     engine: str = "ripple"
+    engine_options: dict = field(default_factory=dict)  # per-engine extras
     graph: str = "powerlaw"          # "er" | "powerlaw"
     n: int = 2000
     m: int = 8000
@@ -110,6 +111,7 @@ class InferenceSession:
 
     def __init__(self, workload: Workload, params: list, graph: DynamicGraph,
                  state: InferenceState, engine: str = "ripple", *,
+                 engine_options: dict | None = None,
                  deadline_ms: float = 0.0, ckpt_dir: str = "",
                  ckpt_every: int = 10, ckpt_keep: int = 3,
                  holdout=None, seed: int = 0):
@@ -118,8 +120,10 @@ class InferenceSession:
         self.graph = graph
         self.state = state
         self.engine_name = canonical_name(engine)
+        self.engine_options = dict(engine_options or {})
         self.engine: Engine = make_engine(self.engine_name, workload, params,
-                                          graph, state)
+                                          graph, state,
+                                          **self.engine_options)
         self.deadline_ms = deadline_ms
         self.holdout = holdout
         self.seed = seed
@@ -154,6 +158,7 @@ class InferenceSession:
         params = wl.init_params(jax.random.PRNGKey(config.seed))
         state = InferenceState.bootstrap(wl, params, x, graph)
         return cls(wl, params, graph, state, config.engine,
+                   engine_options=config.engine_options,
                    deadline_ms=config.deadline_ms, ckpt_dir=config.ckpt_dir,
                    ckpt_every=config.ckpt_every, ckpt_keep=config.ckpt_keep,
                    holdout=holdout, seed=config.seed)
@@ -253,21 +258,25 @@ class InferenceSession:
         self.state = self.engine.sync()
         return self.state
 
-    def swap_engine(self, name: str) -> Engine:
+    def swap_engine(self, name: str, **options) -> Engine:
         """Hot-swap the execution backend mid-stream.
 
         Downloads the current engine's state to the host, then constructs
         the new backend over the *same* graph + state — migration between
-        host (NumPy) and device (jitted) engines is exact because all
-        backends share the (H, S, k) state contract.
+        host (NumPy), device (jitted), and mesh (distributed) engines is
+        exact because all backends share the (H, S, k) state contract; the
+        ``dist`` backend re-partitions + scatters on entry and gathers on
+        exit.  ``options`` are the target engine's declared
+        ``EngineOption`` extras, e.g. ``swap_engine("dist", mesh=mesh)``.
         """
         name = canonical_name(name)
-        if name == self.engine_name:
+        if name == self.engine_name and not options:
             return self.engine
         state = self.sync()
         self.engine = make_engine(name, self.workload, self.params,
-                                  self.graph, state)
+                                  self.graph, state, **options)
         self.engine_name = name
+        self.engine_options = dict(options)
         return self.engine
 
     # -- checkpoint / restore --------------------------------------------
@@ -283,10 +292,16 @@ class InferenceSession:
 
     def checkpoint(self) -> str:
         """Durably snapshot state + graph at the current step; returns the
-        snapshot directory."""
+        snapshot directory.
+
+        Engines that expose ``ckpt_shards`` (the distributed backend's
+        data-shard count) get the per-shard manifest layout: each shard's
+        row block of every leaf is its own file, and restore re-assembles —
+        so the snapshot survives a mesh-geometry change."""
         if not self._ckpt:
             raise RuntimeError("session built without ckpt_dir")
-        return self._ckpt.save(self._ckpt_tree(), self.step)
+        shards = int(getattr(self.engine, "ckpt_shards", 1))
+        return self._ckpt.save(self._ckpt_tree(), self.step, n_shards=shards)
 
     def restore(self, step: int | None = None, *, replay: bool = False) -> int:
         """Restore the latest (or given) committed snapshot; returns the
@@ -312,7 +327,8 @@ class InferenceSession:
             k=np.asarray(tree["k"], dtype=np.float32))
         self.step = int(tree["step"])
         self.engine = make_engine(self.engine_name, self.workload,
-                                  self.params, self.graph, self.state)
+                                  self.params, self.graph, self.state,
+                                  **self.engine_options)
         if replay and self.journal:
             for _jid, batch in self.journal.replay(self.step):
                 self.engine.apply_batch(batch)

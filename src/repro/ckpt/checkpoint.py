@@ -1,14 +1,21 @@
 """Sharded checkpoint/restore with a manifest (fault tolerance, DESIGN.md §5).
 
 Layout:  <dir>/step_<N>/
-            manifest.json        {step, tree structure, leaf -> file map}
-            <leaf>.npy           one array per pytree leaf
+            manifest.json        {step, tree structure, leaf -> file map,
+                                  per-leaf sharding}
+            <leaf>.npy           one file per unsharded pytree leaf
+            <leaf>.shard_<j>.npy row-block j of a sharded leaf
             _COMMITTED           written LAST: restart only trusts committed
                                  snapshots (a crashed save is invisible)
 
-On a cluster each host writes only the leaves it owns (the manifest records
-per-leaf shardings); here the single-process variant writes everything but
-keeps the same commit protocol and layout.
+With ``n_shards > 1`` every array leaf is split into row blocks along axis
+0 and each block is written as its own file, with the sharding recorded in
+the manifest — on a cluster each data-shard's owner writes only its block.
+Restore always reassembles the *full* leaf (concatenate over the recorded
+axis), so a snapshot written under one mesh geometry can be restored onto a
+different one: the consumer re-partitions the reassembled arrays for
+whatever mesh it runs on.  Unsharded manifests keep the legacy string
+entry format, so old snapshots stay restorable.
 """
 from __future__ import annotations
 
@@ -25,21 +32,31 @@ def _flatten(tree):
     return leaves, treedef
 
 
-def save_pytree(tree, path: str, step: int) -> str:
+def save_pytree(tree, path: str, step: int, *, n_shards: int = 1) -> str:
     d = os.path.join(path, f"step_{step:08d}")
     tmp = d + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
     leaves, treedef = _flatten(tree)
-    names = []
+    entries = []
     for i, leaf in enumerate(leaves):
-        name = f"leaf_{i:05d}.npy"
-        np.save(os.path.join(tmp, name), np.asarray(leaf))
-        names.append(name)
+        arr = np.asarray(leaf)
+        base = f"leaf_{i:05d}"
+        if n_shards > 1 and arr.ndim >= 1 and arr.shape[0] >= n_shards:
+            files = []
+            for j, block in enumerate(np.array_split(arr, n_shards, axis=0)):
+                name = f"{base}.shard_{j:03d}.npy"
+                np.save(os.path.join(tmp, name), block)
+                files.append(name)
+            entries.append({"files": files, "axis": 0})
+        else:
+            name = base + ".npy"
+            np.save(os.path.join(tmp, name), arr)
+            entries.append(name)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump({"step": step, "treedef": str(treedef),
-                   "leaves": names}, f)
+                   "n_shards": n_shards, "leaves": entries}, f)
     with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
         f.write("ok")
     if os.path.exists(d):
@@ -48,9 +65,19 @@ def save_pytree(tree, path: str, step: int) -> str:
     return d
 
 
+def _load_leaf(d: str, entry) -> np.ndarray:
+    if isinstance(entry, str):
+        return np.load(os.path.join(d, entry))
+    blocks = [np.load(os.path.join(d, n)) for n in entry["files"]]
+    return np.concatenate(blocks, axis=entry.get("axis", 0))
+
+
 def restore_pytree(tree_like, path: str, step: int | None = None):
     """Restore into the structure of `tree_like`; picks latest committed
-    snapshot if step is None.  Returns (tree, step) or (None, -1)."""
+    snapshot if step is None.  Returns (tree, step) or (None, -1).
+
+    Sharded leaves are reassembled to full arrays regardless of the shard
+    count they were written with (geometry-change-safe restore)."""
     if step is None:
         step = latest_step(path)
         if step < 0:
@@ -62,7 +89,7 @@ def restore_pytree(tree_like, path: str, step: int | None = None):
         manifest = json.load(f)
     leaves, treedef = _flatten(tree_like)
     assert len(leaves) == len(manifest["leaves"]), "structure changed"
-    new_leaves = [np.load(os.path.join(d, n)) for n in manifest["leaves"]]
+    new_leaves = [_load_leaf(d, e) for e in manifest["leaves"]]
     return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest["step"]
 
 
@@ -83,16 +110,16 @@ class CheckpointManager:
         self.every = every
         self.keep = keep
 
-    def save(self, tree, step: int) -> str:
+    def save(self, tree, step: int, *, n_shards: int = 1) -> str:
         """Unconditionally snapshot at ``step`` (with retention gc)."""
-        d = save_pytree(tree, self.path, step)
+        d = save_pytree(tree, self.path, step, n_shards=n_shards)
         self._gc()
         return d
 
-    def maybe_save(self, tree, step: int) -> bool:
+    def maybe_save(self, tree, step: int, *, n_shards: int = 1) -> bool:
         if step % self.every:
             return False
-        self.save(tree, step)
+        self.save(tree, step, n_shards=n_shards)
         return True
 
     def restore(self, tree_like):

@@ -4,36 +4,140 @@ Owns partitioning, relabeling, bootstrap scatter, per-batch update routing
 (updates go to the owner of the hop-0 vertex; degree changes for cut edges
 are the paper's "no-compute" topology sync, realized here as a global
 in-degree refresh), buffer packing, and the static-capacity retry ladder.
+
+State contract (what makes ``dist`` a first-class session backend): the
+engine is constructed from the normalized ``(workload, params, graph,
+state)`` signature — the host ``InferenceState`` is *scattered* onto the
+mesh (re-partition + relabel, no recomputation), and ``gather_state``
+writes the authoritative mesh state back into the same host arrays in
+original vertex-id order, so hot-swapping host<->mesh is exact.
+
+The partitioned adjacency fed to the jitted propagate is an
+*incrementally-maintained* stacked CSR (``PartitionedCSR``): per-batch
+maintenance touches only the rows hit by the batch (vectorized row
+refresh); the full vectorized rebuild runs only when a row outgrows its
+slack or the pool bucket changes — never once per batch.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.utils import next_bucket, pad_to
+from repro.utils import next_bucket
 from .distributed import (DistBatch, DistCSR, make_rc_propagate,
                           make_ripple_propagate)
-from .full import full_inference
-from .graph import DynamicGraph, UpdateBatch
+from .graph import DynamicGraph, UpdateBatch, flat_row_indices
 from .partition import Partitioning, ldg_partition
+from .state import InferenceState
 from .workloads import Workload
+
+_GROW = 1.5  # per-row slack growth factor on rebuild
+_MIN_SLACK = 4
+
+
+class PartitionedCSR:
+    """Stacked ``[P, pool]`` CSR mirror of one adjacency half, maintained
+    incrementally across streaming updates.
+
+    Rows are the ``n_local`` vertices of each partition; each row owns a
+    slack-padded slot range inside its partition's pool (sentinel col =
+    ``n_pad``).  ``refresh_rows`` re-copies only the rows a batch touched
+    from the backing ``_AdjHalf`` (vectorized ragged gather/scatter, O(sum
+    of touched row degrees)); ``rebuild`` re-lays-out everything with fresh
+    slack and a power-of-two pool (stable jit keys) and runs only on row
+    overflow.  ``device()`` caches the jnp upload until the next mutation.
+    """
+
+    def __init__(self, half, part: Partitioning):
+        self.half = half            # the relabeled graph's _AdjHalf
+        self.part = part
+        self.rebuilds = 0           # counters for the bench / tests
+        self.row_refreshes = 0
+        self.rebuild()
+
+    # -- full (re)build: vectorized, no per-partition Python loop ----------
+    def rebuild(self) -> None:
+        P_, nl = self.part.n_parts, self.part.n_local
+        deg = self.half.length.astype(np.int64)            # [n_pad]
+        cap = np.maximum((deg * _GROW).astype(np.int64) + _MIN_SLACK, deg)
+        cap2d = cap.reshape(P_, nl)
+        start2d = np.zeros((P_, nl), dtype=np.int64)
+        np.cumsum(cap2d[:, :-1], axis=1, out=start2d[:, 1:])
+        pool = next_bucket(int((start2d[:, -1] + cap2d[:, -1]).max()) + 1)
+        col = np.full((P_, pool), self.part.n_pad, dtype=np.int32)
+        w = np.zeros((P_, pool), dtype=np.float32)
+        # flat destination slots across all rows at once
+        row_base = np.arange(P_, dtype=np.int64).repeat(nl) * pool \
+            + start2d.ravel()
+        src_idx = flat_row_indices(self.half.start, deg)
+        dst_idx = flat_row_indices(row_base, deg)
+        col.ravel()[dst_idx] = self.half.col[src_idx]
+        w.ravel()[dst_idx] = self.half.w[src_idx]
+        self.pool = pool
+        self.col, self.w = col, w
+        self.start = start2d.astype(np.int32)
+        self.length = deg.reshape(P_, nl).astype(np.int32)
+        self.cap = cap2d
+        self.rebuilds += 1
+        self._dev: DistCSR | None = None
+
+    # -- incremental maintenance ------------------------------------------
+    def refresh_rows(self, rows: np.ndarray) -> None:
+        """Re-copy the given (relabeled global id) rows from the backing
+        half — the per-batch path after topology updates mutate the graph."""
+        rows = np.asarray(rows, dtype=np.int64)
+        if rows.size == 0:
+            return
+        nl = self.part.n_local
+        p, r = rows // nl, rows % nl
+        deg = self.half.length[rows]
+        if np.any(deg > self.cap[p, r]):
+            self.rebuild()          # some row outgrew its slack
+            return
+        row_base = p * self.pool + self.start[p, r]
+        src_idx = flat_row_indices(self.half.start[rows], deg)
+        dst_idx = flat_row_indices(row_base, deg)
+        self.col.ravel()[dst_idx] = self.half.col[src_idx]
+        self.w.ravel()[dst_idx] = self.half.w[src_idx]
+        self.length[p, r] = deg
+        self.row_refreshes += int(rows.size)
+        self._dev = None
+
+    def device(self) -> DistCSR:
+        if self._dev is None:
+            self._dev = DistCSR(col=jnp.asarray(self.col),
+                                w=jnp.asarray(self.w),
+                                start=jnp.asarray(self.start),
+                                length=jnp.asarray(self.length))
+        return self._dev
 
 
 class DistEngine:
     """Distributed incremental (or recompute-baseline) streaming engine."""
 
-    def __init__(self, workload: Workload, params: list[dict], x: np.ndarray,
-                 graph: DynamicGraph, mesh, *, mode: str = "ripple",
+    def __init__(self, workload: Workload, params: list[dict],
+                 graph: DynamicGraph, state: InferenceState, mesh, *,
+                 mode: str = "ripple", data_axes: tuple = ("data",),
                  seed: int = 0, min_bucket: int = 32):
         assert mode in ("ripple", "rc")
         self.workload = workload
         self.mesh = mesh
         self.mode = mode
         self.min_bucket = min_bucket
-        self.n_parts = mesh.shape["data"]
+        self.data_axes = tuple(data_axes)
+        missing = [a for a in self.data_axes if a not in mesh.shape]
+        if missing or "model" not in mesh.shape:
+            raise ValueError(f"mesh axes {tuple(mesh.shape)} must include "
+                             f"'model' and data axes {self.data_axes}")
+        self.n_parts = int(np.prod([mesh.shape[a] for a in self.data_axes]))
         self.M = mesh.shape["model"]
 
+        # the session's graph stays authoritative in ORIGINAL ids; the
+        # engine mirrors every effective update into its relabeled copy
+        self.host_graph = graph
         src, dst, w = graph.coo()
         self.part = ldg_partition(graph.n, src, dst, self.n_parts, seed=seed)
         self.n_local = self.part.n_local
@@ -41,61 +145,81 @@ class DistEngine:
         # relabeled graph over padded id space (pad vertices are isolated)
         self.g = DynamicGraph(n_pad, self.part.new_of_old[src],
                               self.part.new_of_old[dst], w)
-        x_pad = np.zeros((n_pad, x.shape[1]), dtype=np.float32)
-        x_pad[self.part.new_of_old] = x
-
-        self.params = [{k: jnp.asarray(v) for k, v in p.items()} for p in params]
-        H, S = full_inference(workload, params, jnp.asarray(x_pad),
-                              *self.g.coo(), self.g.in_degree)
-        P_, nl = self.n_parts, self.n_local
-        self.H = tuple(jnp.asarray(h).reshape(P_, nl, -1) for h in H)
-        self.S = (jnp.zeros((P_, nl, 1)),) + tuple(
-            jnp.asarray(s).reshape(P_, nl, -1) for s in S[1:])
+        self.params = [{k: jnp.asarray(v) for k, v in p.items()}
+                       for p in params]
+        # scatter the host state onto the mesh layout — entry migration is
+        # a relabel, not a recomputation, so host->mesh swap is exact
+        self.H = tuple(self._scatter(h) for h in state.H)
+        self.S = (jnp.zeros((self.n_parts, self.n_local, 1)),) \
+            + tuple(self._scatter(s) for s in state.S[1:])
+        self.out_csr = PartitionedCSR(self.g.out, self.part)
+        self.in_csr = PartitionedCSR(self.g.inn, self.part) \
+            if mode == "rc" else None
         self._fn_cache: dict = {}
         self.last_comm = None  # per-hop exchanged slot counts (paper fig12c)
+        self.last_host_seconds = 0.0   # routing + CSR maintenance per batch
 
-    # -- per-batch CSR snapshots ------------------------------------------
-    def _stacked_csr(self, half) -> DistCSR:
-        P_, nl = self.n_parts, self.n_local
-        lengths = half.length.reshape(P_, nl)
-        pool = next_bucket(int(lengths.sum(axis=1).max()) + 1)
-        col = np.full((P_, pool), self.part.n_pad, dtype=np.int32)
-        w = np.zeros((P_, pool), dtype=np.float32)
-        start = np.zeros((P_, nl), dtype=np.int32)
-        for p in range(P_):
-            rows = np.arange(p * nl, (p + 1) * nl)
-            lens = half.length[rows]
-            st = np.zeros(nl, dtype=np.int64)
-            np.cumsum(lens[:-1], out=st[1:])
-            start[p] = st
-            from .graph import flat_row_indices
-            flat = flat_row_indices(half.start[rows], lens)
-            total = int(lens.sum())
-            col[p, :total] = half.col[flat]
-            w[p, :total] = half.w[flat]
-        return DistCSR(col=jnp.asarray(col), w=jnp.asarray(w),
-                       start=jnp.asarray(start),
-                       length=jnp.asarray(lengths.astype(np.int32)))
+    # -- layout transforms -------------------------------------------------
+    def _scatter(self, arr: np.ndarray) -> jax.Array:
+        """[n, d] host array in original id order -> [P, n_local, d]."""
+        pad = np.zeros((self.part.n_pad, arr.shape[1]), dtype=np.float32)
+        pad[self.part.new_of_old] = arr
+        return jnp.asarray(pad.reshape(self.n_parts, self.n_local, -1))
+
+    def _gather(self, arr: jax.Array) -> np.ndarray:
+        """[P, n_local, d] mesh array -> [n, d] in original id order."""
+        flat = np.asarray(arr).reshape(self.part.n_pad, -1)
+        return flat[self.part.new_of_old]
+
+    def gather_state(self, state: InferenceState) -> InferenceState:
+        """Write the authoritative mesh state back into ``state`` in place
+        (original vertex-id order) — the exit half of exact migration."""
+        for l, h in enumerate(self.H):
+            state.H[l][...] = self._gather(h)
+        for l in range(1, len(self.S)):
+            state.S[l][...] = self._gather(self.S[l])
+        state.k[...] = self.host_graph.in_degree
+        return state
+
+    def gather_H(self) -> list[np.ndarray]:
+        """Embeddings back in ORIGINAL vertex id order."""
+        return [self._gather(h) for h in self.H]
+
+    def query(self, vertices: np.ndarray) -> np.ndarray:
+        """Final-layer rows for ``vertices`` without a full gather."""
+        flat = np.asarray(self.H[-1]).reshape(self.part.n_pad, -1)
+        return flat[self.part.new_of_old[np.asarray(vertices, np.int64)]]
 
     # -- routing -----------------------------------------------------------
     def _route(self, batch: UpdateBatch):
-        """Relabel + assign updates to owner of hop-0 vertex; returns padded
-        per-partition buffers."""
+        """Apply topology to both graph mirrors, refresh the partitioned
+        CSR rows the batch touched, and pack padded per-partition buffers."""
         P_, nl, n_pad = self.n_parts, self.n_local, self.part.n_pad
         relabel = self.part.new_of_old
-        adds, dels = self.g.apply_topology(
-            [type(e)(int(relabel[e.src]), int(relabel[e.dst]), e.add, e.weight)
-             for e in batch.edges])
+        adds, dels = self.host_graph.apply_topology(batch.edges)
+        r_adds = [(int(relabel[e.src]), int(relabel[e.dst]), e.weight)
+                  for e in adds]
+        r_dels = [(int(relabel[e.src]), int(relabel[e.dst]), e.weight)
+                  for e in dels]
+        for s, d, wt in r_adds:
+            self.g.add_edge(s, d, wt)
+        for s, d, _ in r_dels:
+            self.g.delete_edge(s, d)
+        touched = r_adds + r_dels
+        self.out_csr.refresh_rows(np.unique([s for s, _, _ in touched]))
+        if self.in_csr is not None:
+            self.in_csr.refresh_rows(np.unique([d for _, d, _ in touched]))
+
         feats: dict[int, list] = {p: [] for p in range(P_)}
         for f in batch.features:
             g_id = int(relabel[f.vertex])
             feats[g_id // nl].append((g_id % nl, f.value))
         radds: dict[int, list] = {p: [] for p in range(P_)}
-        for e in adds:
-            radds[e.src // nl].append((e.src % nl, e.dst, e.weight))
+        for s, d, wt in r_adds:
+            radds[s // nl].append((s % nl, d, wt))
         rdels: dict[int, list] = {p: [] for p in range(P_)}
-        for e in dels:
-            rdels[e.src // nl].append((e.src % nl, e.dst, e.weight))
+        for s, d, wt in r_dels:
+            rdels[s // nl].append((s % nl, d, wt))
 
         d0 = int(self.H[0].shape[-1])
         capf = max(self.min_bucket,
@@ -136,10 +260,16 @@ class DistEngine:
 
     # -- main entry --------------------------------------------------------
     def apply_batch(self, batch: UpdateBatch) -> np.ndarray:
+        """Apply one batch; returns affected vertex ids in ORIGINAL order.
+
+        Blocks on the updated mesh state before returning so wall-clock
+        measurements upstream reflect real device latency."""
+        t_host = time.perf_counter()
         dist_batch = self._route(batch)
         k = jnp.asarray(self.g.in_degree.reshape(self.n_parts, self.n_local))
-        out_csr = self._stacked_csr(self.g.out)
-        in_csr = self._stacked_csr(self.g.inn) if self.mode == "rc" else None
+        out_csr = self.out_csr.device()
+        in_csr = self.in_csr.device() if self.mode == "rc" else None
+        self.last_host_seconds = time.perf_counter() - t_host
 
         r = max(self.min_bucket, int(dist_batch.feat_idx.shape[1]) * 2)
         e = 4 * r
@@ -157,11 +287,11 @@ class DistEngine:
                 if self.mode == "ripple":
                     self._fn_cache[key] = make_ripple_propagate(
                         self.mesh, self.workload, self.n_local, tuple(caps),
-                        halo)
+                        halo, data_axes=self.data_axes)
                 else:
                     self._fn_cache[key] = make_rc_propagate(
                         self.mesh, self.workload, self.n_local, tuple(caps),
-                        halo, pull)
+                        halo, pull, data_axes=self.data_axes)
             fn = self._fn_cache[key]
             if self.mode == "ripple":
                 H, S, final, ovf, comm = fn(self.params, self.H, self.S, k,
@@ -170,20 +300,14 @@ class DistEngine:
                 H, S, final, ovf, comm = fn(self.params, self.H, self.S, k,
                                             out_csr, in_csr, dist_batch)
             if float(ovf) == 0.0:
+                jax.block_until_ready(H)
                 self.H, self.S = H, S
                 self.last_comm = np.asarray(comm)
                 f = np.asarray(final).reshape(-1)
                 offs = np.repeat(np.arange(self.n_parts) * self.n_local,
                                  final.shape[-1])
                 f_global = np.where(f < self.n_local, f + offs, -1)
-                return f_global[f_global >= 0]
+                f_global = f_global[f_global >= 0]
+                orig = self.part.old_of_new[f_global]
+                return np.unique(orig[orig >= 0])
             r, e, halo, pull = r * 4, e * 4, halo * 4, pull * 4
-
-    # -- test/ckpt helpers -------------------------------------------------
-    def gather_H(self) -> list[np.ndarray]:
-        """Embeddings back in ORIGINAL vertex id order."""
-        out = []
-        for h in self.H:
-            flat = np.asarray(h).reshape(self.part.n_pad, -1)
-            out.append(flat[self.part.new_of_old])
-        return out

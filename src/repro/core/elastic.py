@@ -3,38 +3,35 @@
 Strategy (snapshot -> reshard -> restart, the standard production pattern):
 the engine's per-partition state is gathered into original-vertex order,
 the graph is re-partitioned for the new worker count, and a fresh engine
-resumes from the *exact* same embeddings — no recomputation, no approximation
-(verified by test_fault_tolerance.py::test_elastic_resize).  Combined with
+resumes from the *exact* same embeddings — no recomputation, no
+approximation.  The engine's scatter-on-entry / gather-on-exit state
+contract (dist_host.py) is what makes this a pure relabel.  Combined with
 the update journal this also covers worker loss: restart on the surviving
 mesh and replay from the last snapshot's high-water mark.
 """
 from __future__ import annotations
 
 import numpy as np
-import jax
 
 from .dist_host import DistEngine
-from .graph import DynamicGraph
-from .workloads import Workload
+from .state import InferenceState
 
 
-def elastic_resize(engine: DistEngine, new_mesh, *, seed: int = 0) -> DistEngine:
-    """Rebuild the distributed engine on a new mesh (more/fewer partitions)."""
-    # 1) snapshot state in ORIGINAL vertex order
-    H_orig = engine.gather_H()
-    part = engine.part
-    # 2) recover the current graph in original ids
-    src_r, dst_r, w_r = engine.g.coo()
-    keep = part.old_of_new[src_r] >= 0
-    src = part.old_of_new[src_r[keep]]
-    dst = part.old_of_new[dst_r[keep]]
-    w = w_r[keep]
-    g = DynamicGraph(part.n, src, dst, w)
-    # 3) fresh engine on the new mesh; bootstrap recomputes S from H[0],
-    #    which equals the streamed state exactly (engines are exact)
-    new_engine = DistEngine(engine.workload,
-                            [{k: np.asarray(v) for k, v in p.items()}
-                             for p in engine.params],
-                            H_orig[0], g, new_mesh, mode=engine.mode,
-                            seed=seed)
-    return new_engine
+def elastic_resize(engine: DistEngine, new_mesh, *, seed: int = 0,
+                   data_axes: tuple | None = None) -> DistEngine:
+    """Rebuild the distributed engine on a new mesh (more/fewer partitions).
+
+    ``data_axes`` defaults to the engine's current partition axes so a
+    multi-pod geometry keeps its meaning across a resize; pass it
+    explicitly when the new mesh names different axes."""
+    if data_axes is None:
+        data_axes = engine.data_axes
+    n = engine.part.n
+    state = InferenceState(
+        H=[np.zeros((n, int(h.shape[-1])), np.float32) for h in engine.H],
+        S=[np.zeros((n, int(s.shape[-1])), np.float32) for s in engine.S],
+        k=np.zeros(n, np.float32))
+    engine.gather_state(state)
+    return DistEngine(engine.workload, engine.params, engine.host_graph,
+                      state, new_mesh, mode=engine.mode,
+                      data_axes=data_axes, seed=seed)

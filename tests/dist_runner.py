@@ -1,81 +1,167 @@
-"""Standalone distributed-engine checker (run in a subprocess with 8 virtual
-CPU devices; see test_distributed.py).  Exits non-zero on any mismatch."""
+"""Standalone distributed-session checker (run in a subprocess with 8 virtual
+CPU devices; see test_distributed.py).  Exits non-zero on any mismatch.
+
+Everything goes through ``repro.api`` — the distributed path is exercised
+exactly the way a serving deployment reaches it: ``InferenceSession`` with
+``engine="dist"`` / ``"dist-rc"`` and a mesh in ``engine_options``.  Covers:
+
+  * oracle exactness of the dist session for all five workload families,
+    both modes, including the multi-pod ("pod", "data") partition geometry;
+  * ``swap_engine`` ripple -> dist -> device round-trip equivalence;
+  * sharded checkpoint -> restore onto a *different* mesh geometry.
+"""
 import os
 import sys
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import tempfile  # noqa: E402
+
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 
-from repro.core import (DynamicGraph, EdgeUpdate, FeatureUpdate,  # noqa: E402
-                        InferenceState, UpdateBatch, erdos_renyi,
-                        full_inference, make_workload)
-from repro.core.dist_host import DistEngine  # noqa: E402
+from repro.api import InferenceSession, SessionConfig, engine_names  # noqa: E402
+from repro.core import full_inference  # noqa: E402
+from repro.utils import make_mesh_compat  # noqa: E402
 
 ATOL = 3e-3
 
 
-def oracle_H(wl, params, g, x_current):
-    H, _ = full_inference(wl, params, jax.numpy.asarray(x_current), *g.coo(),
-                          g.in_degree)
+def build(name: str, engine: str, options: dict, **over) -> InferenceSession:
+    cfg = dict(workload=name, engine=engine, engine_options=options,
+               graph="er", n=60, m=260, d_in=8, d_hidden=12, n_classes=4,
+               seed=0)
+    cfg.update(over)
+    return InferenceSession.build(SessionConfig(**cfg))
+
+
+def oracle_H(session) -> list[np.ndarray]:
+    st = session.sync()
+    H, _ = full_inference(session.workload, session.params,
+                          jax.numpy.asarray(st.H[0]), *session.graph.coo(),
+                          session.graph.in_degree)
     return [np.asarray(h) for h in H]
 
 
+def assert_exact(session, label: str) -> None:
+    H_ref = oracle_H(session)
+    for l, (a, b) in enumerate(zip(session.state.H, H_ref)):
+        err = np.abs(a - b).max()
+        assert err < ATOL, f"{label} layer {l} err={err}"
+    q = session.query()
+    assert np.abs(q - H_ref[-1]).max() < ATOL, f"{label} query mismatch"
+
+
 def run(mode: str, name: str) -> None:
-    n, m = 60, 260
-    wl = make_workload(name, n_layers=2, d_in=8, d_hidden=12, n_classes=4)
-    src, dst, w = erdos_renyi(n, m, seed=0, weighted=wl.spec.weighted)
-    g = DynamicGraph(n, src, dst, w)
-    rng = np.random.default_rng(1)
-    x = rng.normal(size=(n, 8)).astype(np.float32)
-    params = wl.init_params(jax.random.PRNGKey(0))
-
-    from repro.utils import make_mesh_compat
+    """Session oracle exactness per batch, one workload x one dist mode."""
     mesh = make_mesh_compat((4, 2), ("data", "model"))
-    eng = DistEngine(wl, params, x, g, mesh, mode=mode)
-    # reference graph mirrors updates in ORIGINAL id space
-    g_ref = DynamicGraph(n, src, dst, w)
-    x_ref = x.copy()
-
+    engine = "dist" if mode == "ripple" else "dist-rc"
+    s = build(name, engine, {"mesh": mesh})
+    updates = list(s.make_stream(15, seed=1))
+    comm = None
     for step in range(3):
-        batch = UpdateBatch()
-        for _ in range(5):
-            kind = rng.integers(0, 3)
-            u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
-            if kind == 0 and u != v:
-                wt = float(rng.uniform(0.2, 1.0))
-                batch.edges.append(EdgeUpdate(u, v, True, wt))
-            elif kind == 1:
-                s2, d2, _ = g_ref.coo()
-                if s2.size:
-                    i = rng.integers(0, s2.size)
-                    batch.edges.append(EdgeUpdate(int(s2[i]), int(d2[i]), False))
-            else:
-                val = rng.normal(size=8).astype(np.float32)
-                batch.features.append(FeatureUpdate(u, val))
-        # mirror to reference
-        for e in batch.edges:
-            if e.add:
-                g_ref.add_edge(e.src, e.dst, e.weight)
-            else:
-                g_ref.delete_edge(e.src, e.dst)
-        for f in batch.features:
-            x_ref[f.vertex] = f.value
+        rep = s.ingest(updates[step * 5:(step + 1) * 5])
+        comm = rep.results[-1].messages_per_hop
+        assert_exact(s, f"{mode}/{name} step {step}")
+    assert comm is not None and len(comm) == 2
+    print(f"OK {mode} {name} comm={comm}")
 
-        eng.apply_batch(batch)
-        H_ref = oracle_H(wl, params, g_ref, x_ref)
-        H_got = eng.gather_H()
-        for l, (a, b) in enumerate(zip(H_got, H_ref)):
-            err = np.abs(a - b).max()
-            assert err < ATOL, f"{mode}/{name} step {step} layer {l} err={err}"
-    assert eng.last_comm is not None and eng.last_comm.shape[0] == 2
-    print(f"OK {mode} {name} comm={eng.last_comm.tolist()}")
+
+def run_multipod() -> None:
+    """Vertex partition spanning two mesh axes: ("pod", "data") x model."""
+    mesh = make_mesh_compat((2, 2, 2), ("pod", "data", "model"))
+    s = build("gc-m", "dist", {"mesh": mesh, "data_axes": ("pod", "data")})
+    assert s.engine.impl.n_parts == 4 and s.engine.impl.M == 2
+    s.ingest(s.make_stream(15, seed=1), batch_size=5)
+    assert_exact(s, "multipod")
+    print("OK multipod data_axes=('pod','data')")
+
+
+def run_swap_roundtrip() -> None:
+    """ripple -> dist -> device mid-stream == never swapping at all."""
+    mesh = make_mesh_compat((4, 2), ("data", "model"))
+    a = build("gc-m", "ripple", {})
+    b = build("gc-m", "ripple", {})
+    ups_a = list(a.make_stream(30, seed=1))
+    ups_b = list(b.make_stream(30, seed=1))
+    a.ingest(ups_a, batch_size=5)
+
+    b.ingest(ups_b[:10], batch_size=5)
+    b.swap_engine("dist", mesh=mesh)
+    assert b.engine_name == "dist"
+    b.ingest(ups_b[10:20], batch_size=5)
+    b.swap_engine("device")
+    b.ingest(ups_b[20:], batch_size=5)
+
+    for l, (ha, hb) in enumerate(zip(a.sync().H, b.sync().H)):
+        err = np.abs(ha - hb).max()
+        assert err < ATOL, f"swap layer {l} err={err}"
+    assert_exact(b, "swap")
+    print("OK swap ripple->dist->device round trip")
+
+
+def run_ckpt_geometry_change() -> None:
+    """Sharded checkpoint under one mesh restores onto a different one."""
+    import glob
+    import json
+
+    mesh_a = make_mesh_compat((4, 2), ("data", "model"))
+    mesh_b = make_mesh_compat((2, 4), ("data", "model"))
+    tmp = tempfile.mkdtemp(prefix="dist_ckpt_")
+    s = build("gc-s", "dist", {"mesh": mesh_a}, ckpt_dir=tmp,
+              ckpt_every=10_000)
+    updates = list(s.make_stream(30, seed=1))
+    s.ingest(updates[:15], batch_size=5)
+    s.checkpoint()
+    H_ckpt = [h.copy() for h in s.sync().H]
+
+    # the manifest records the per-shard layout: one file per data shard
+    man = json.load(open(glob.glob(os.path.join(tmp, "step_*",
+                                                "manifest.json"))[0]))
+    assert man["n_shards"] == 4
+    assert len(man["leaves"][0]["files"]) == 4
+
+    s.ingest(updates[15:], batch_size=5)  # diverge past the snapshot
+    # "worker loss": come back up on a 2-partition mesh
+    s.engine_options = {"mesh": mesh_b}
+    assert s.restore() >= 0
+    for l, (h, href) in enumerate(zip(s.sync().H, H_ckpt)):
+        err = np.abs(h - href).max()
+        assert err < 1e-6, f"restore layer {l} err={err}"
+    assert s.engine.impl.n_parts == 2
+    # the restored session keeps serving exactly on the new geometry
+    s.ingest(updates[15:], batch_size=5)
+    assert_exact(s, "post-restore")
+    print("OK sharded ckpt restore across mesh geometry change")
+
+
+def run_elastic_resize() -> None:
+    """elastic_resize is a pure gather -> re-scatter: same embeddings on a
+    different partition count, and the resized engine keeps serving."""
+    from repro.core.elastic import elastic_resize
+
+    mesh_a = make_mesh_compat((4, 2), ("data", "model"))
+    mesh_b = make_mesh_compat((2, 4), ("data", "model"))
+    s = build("gs-s", "dist", {"mesh": mesh_a})
+    updates = list(s.make_stream(20, seed=1))
+    s.ingest(updates[:10], batch_size=5)
+    H_before = s.engine.impl.gather_H()
+    resized = elastic_resize(s.engine.impl, mesh_b)
+    assert resized.n_parts == 2 and resized.data_axes == ("data",)
+    for l, (a, b) in enumerate(zip(H_before, resized.gather_H())):
+        err = np.abs(a - b).max()
+        assert err < 1e-6, f"elastic layer {l} err={err}"
+    print("OK elastic_resize 4 -> 2 partitions")
 
 
 if __name__ == "__main__":
+    assert {"dist", "dist-rc"} <= set(engine_names())
     for mode in ("ripple", "rc"):
         for name in ("gc-s", "gs-s", "gc-m", "gi-s", "gc-w"):
             run(mode, name)
+    run_multipod()
+    run_swap_roundtrip()
+    run_ckpt_geometry_change()
+    run_elastic_resize()
     print("ALL DIST OK")

@@ -1,9 +1,12 @@
-"""Distributed engines (shard_map over 8 virtual devices) match the oracle.
+"""Distributed session backends (shard_map over 8 virtual devices) match the
+oracle, swap exactly with host engines, and survive a mesh-geometry change.
 
 Runs in a subprocess because the 8-device XLA_FLAGS override must be set
 before JAX initializes (the main test process keeps the single real device).
 """
+import ast
 import os
+import re
 import subprocess
 import sys
 
@@ -19,7 +22,6 @@ def test_distributed_engines_subprocess():
     assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
     assert "ALL DIST OK" in res.stdout
     # the paper's headline: RIPPLE communicates far less than RC
-    import re
-    comms = {m[0]: eval(m[1]) for m in
+    comms = {m[0]: ast.literal_eval(m[1]) for m in
              re.findall(r"OK (\w+) gc-s comm=(\[[^\]]*\])", res.stdout)}
     assert sum(comms["rc"]) > 3 * sum(comms["ripple"])

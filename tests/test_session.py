@@ -7,7 +7,7 @@ import pytest
 import jax
 
 from repro.api import (InferenceSession, SessionConfig, engine_names,
-                       make_engine)
+                       engine_options, make_engine)
 from repro.core import (DynamicGraph, InferenceState, WORKLOAD_NAMES,
                         erdos_renyi, full_inference, make_workload)
 
@@ -42,7 +42,8 @@ def _assert_session_exact(session):
 
 # -- registry ---------------------------------------------------------------
 def test_registry_has_all_backends():
-    assert {"ripple", "rc", "device", "vertexwise", "full"} <= set(engine_names())
+    assert {"ripple", "rc", "device", "vertexwise", "full",
+            "dist", "dist-rc"} <= set(engine_names())
 
 
 def test_registry_unknown_engine_raises():
@@ -54,6 +55,23 @@ def test_registry_unknown_engine_raises():
 def test_registry_aliases_resolve():
     s = InferenceSession.build(_small_cfg("gc-s", "rp"))
     assert s.engine_name == "ripple"
+
+
+def test_registry_rejects_undeclared_options():
+    """Options are per-engine declarations: ripple accepts none, and dist
+    rejects options it did not declare — both with a naming TypeError."""
+    wl = make_workload("gc-s", n_layers=2, d_in=4, d_hidden=4, n_classes=2)
+    with pytest.raises(TypeError, match="does not accept"):
+        make_engine("ripple", wl, [], None, None, mesh=object())
+    with pytest.raises(TypeError, match="mesh"):
+        make_engine("dist", wl, [], None, None, bogus=1)
+
+
+def test_registry_declares_dist_options():
+    assert {"mesh", "mode", "data_axes"} <= set(engine_options("dist"))
+    assert engine_options("dist")["mode"].default == "ripple"
+    assert "mode" not in engine_options("dist-rc")  # pinned to rc
+    assert engine_options("ripple") == {}
 
 
 # -- session round-trip == oracle, all five workloads -----------------------
@@ -209,3 +227,58 @@ def test_swap_to_same_engine_is_noop():
     s = InferenceSession.build(_small_cfg("gc-s", "ripple"))
     eng = s.engine
     assert s.swap_engine("rp") is eng
+
+
+# -- distributed backend through the session (single-device mesh; the
+# -- 8-virtual-device geometry runs in tests/dist_runner.py) ----------------
+def test_dist_session_matches_oracle_default_mesh():
+    """engine="dist" with no options partitions over whatever devices exist
+    (one, here) and must stay exact through a mixed update stream."""
+    s = InferenceSession.build(_small_cfg("gc-m", "dist"))
+    report = s.ingest(s.make_stream(18, seed=1), batch_size=6)
+    assert all(r.messages_per_hop for r in report.results)
+    _assert_session_exact(s)
+
+
+def test_hot_swap_through_dist_round_trip():
+    """ripple -> dist -> device mid-stream must equal never swapping."""
+    cfg = _small_cfg("gs-s", "ripple")
+    a = InferenceSession.build(cfg)
+    b = InferenceSession.build(cfg)
+    ups_a = list(a.make_stream(24, seed=1))
+    ups_b = list(b.make_stream(24, seed=1))
+    a.ingest(ups_a, batch_size=4)
+
+    b.ingest(ups_b[:8], batch_size=4)
+    b.swap_engine("dist")
+    assert b.engine_name == "dist"
+    b.ingest(ups_b[8:16], batch_size=4)
+    b.swap_engine("device")
+    b.ingest(ups_b[16:], batch_size=4)
+
+    for h_a, h_b in zip(a.sync().H, b.sync().H):
+        np.testing.assert_allclose(h_a, h_b, atol=ATOL, rtol=RTOL)
+    _assert_session_exact(b)
+
+
+def test_dist_session_sharded_checkpoint_restore(tmp_path):
+    """A dist session writes one file per data shard; restore (onto the
+    same single-device mesh here) reproduces the snapshot exactly."""
+    import glob
+    import json
+    s = InferenceSession.build(_small_cfg("gc-s", "dist",
+                                          ckpt_dir=str(tmp_path),
+                                          ckpt_every=10_000))
+    updates = list(s.make_stream(20, seed=1))
+    s.ingest(updates[:10], batch_size=5)
+    s.checkpoint()
+    man = json.load(open(glob.glob(str(tmp_path / "step_*" /
+                                       "manifest.json"))[0]))
+    assert man["n_shards"] == s.engine.ckpt_shards
+    H_ckpt = [h.copy() for h in s.sync().H]
+    s.ingest(updates[10:], batch_size=5)
+    assert s.restore() >= 0
+    for h, href in zip(s.sync().H, H_ckpt):
+        np.testing.assert_allclose(h, href, atol=1e-6, rtol=1e-6)
+    s.ingest(updates[10:], batch_size=5)
+    _assert_session_exact(s)
