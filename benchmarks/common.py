@@ -47,9 +47,13 @@ def engine_for(kind: str, wl, params, g, state):
 
 
 def run_stream(engine, g, holdout, n_updates: int, batch_size: int,
-               d_in: int, seed: int = 1):
-    """Returns (throughput up/s, median latency s, stats list)."""
-    stream = make_stream(g, holdout, n_updates, d_in, seed=seed)
+               d_in: int, seed: int = 1, **stream_kwargs):
+    """Returns (throughput up/s, median latency s, stats list).
+
+    ``stream_kwargs`` pass through to ``make_stream`` (``mix``, ``skew``,
+    ``feature_scale``)."""
+    stream = make_stream(g, holdout, n_updates, d_in, seed=seed,
+                         **stream_kwargs)
     stats, t0 = [], time.perf_counter()
     for batch in stream.batches(batch_size):
         stats.append(engine.apply_batch(batch))

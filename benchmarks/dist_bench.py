@@ -27,35 +27,42 @@ D = 64
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_dist.json")
 
 
-def run(parts: int, mode: str, n=1500, m=30000, batch=100, n_updates=600):
+def run(parts: int, mode: str, n=1500, m=30000, batch=100, n_updates=600,
+        workload="gc-s", mix=(1.0, 1.0, 1.0)):
     mesh = make_mesh_compat((parts, 8 // parts), ("data", "model"))
     engine = "dist" if mode == "ripple" else "dist-rc"
     session = InferenceSession.build(SessionConfig(
-        workload="gc-s", engine=engine, engine_options={"mesh": mesh},
+        workload=workload, engine=engine, engine_options={"mesh": mesh},
         graph="er", n=n, m=m, n_layers=3, d_in=D, d_hidden=D, n_classes=16,
         seed=0))
-    stream = session.make_stream(n_updates, seed=1)
+    stream = session.make_stream(n_updates, seed=1, mix=mix)
 
-    comm, lat, host = [], [], []
+    monotonic = session.workload.spec.monotonic
+    comm, pulls, lat, host = [], [], [], []
     first = True
     for b in stream.batches(batch):
         rep = session.ingest(b)
         if not first:       # skip compile batch
             lat.append(rep.latencies[0])
-            comm.append(sum(rep.results[0].messages_per_hop))
+            slots = rep.results[0].messages_per_hop
+            comm.append(sum(slots))
+            # monotonic comm interleaves [halo, pull] per hop; the pull
+            # slots carry the SHRINK-only vs pull-everything contrast
+            pulls.append(sum(slots[1::2]) if monotonic else 0)
             host.append(session.engine.impl.last_host_seconds)
         first = False
     thr = n_updates / max(sum(lat), 1e-9)
     csr = session.engine.impl.out_csr
-    print(f"fig12/{mode}/p{parts},{np.median(lat) * 1e6:.1f},"
+    print(f"fig12/{workload}/{mode}/p{parts},{np.median(lat) * 1e6:.1f},"
           f"throughput={thr:.0f}ups comm_slots={np.mean(comm):.0f} "
           f"comm_bytes~={np.mean(comm) * D * 4:.0f} "
           f"host_us={np.median(host) * 1e6:.0f} "
           f"csr_rebuilds={csr.rebuilds}", flush=True)
-    return {"parts": parts, "mode": mode,
+    return {"parts": parts, "mode": mode, "workload": workload,
             "median_latency_s": float(np.median(lat)),
             "updates_per_sec": float(thr),
             "mean_comm_slots": float(np.mean(comm)),
+            "mean_pull_slots": float(np.mean(pulls)),
             "median_host_seconds": float(np.median(host)),
             "csr_rebuilds": int(csr.rebuilds),
             "csr_row_refreshes": int(csr.row_refreshes)}
@@ -74,11 +81,38 @@ def main():
         reduction[str(parts)] = ratio
         print(f"fig12/comm-reduction/p{parts},0.0,rc_over_rp={ratio:.1f}x",
               flush=True)
+    # monotonic aggregators: candidate-extrema mailboxes + shrink-only
+    # re-aggregation pulls vs the pull-everything RC baseline.  The
+    # candidate halo is identical in both modes, so the GROW/SHRINK
+    # classification shows up in the *pull* slots (odd comm entries):
+    # RIPPLE requests re-aggregation only for covered-removal rows, RC for
+    # every affected row.  Deletion-heavy stream (bench_single's monotonic
+    # regime) on a sparse graph with small batches keeps the propagation in
+    # the incremental regime; gc-min because the non-self-dependent family
+    # lets filtered propagation actually shed rows (SAGE's h^{l-1}
+    # dependence keeps every frontier row alive regardless of aggregator).
+    mono = []
+    for mode in ("ripple", "rc"):
+        mono.append(run(4, mode, workload="gc-min", n=3000, m=15000,
+                        batch=20, n_updates=300, mix=(1, 3, 1)))
+    mono_ratio = mono[1]["mean_comm_slots"] \
+        / max(mono[0]["mean_comm_slots"], 1e-9)
+    pull_ratio = mono[1]["mean_pull_slots"] \
+        / max(mono[0]["mean_pull_slots"], 1e-9)
+    print(f"fig12/comm-reduction/gc-min-p4,0.0,"
+          f"rc_over_rp={mono_ratio:.1f}x pull_rc_over_rp={pull_ratio:.1f}x",
+          flush=True)
     with open(OUT_PATH, "w") as f:
         json.dump({"bench": "dist", "workload": "gc-s", "n": 1500,
                    "m": 30000, "batch": 100, "n_updates": 600, "d": D,
                    "results": records,
-                   "comm_reduction_rc_over_rp": reduction}, f, indent=2)
+                   "comm_reduction_rc_over_rp": reduction,
+                   "monotonic": {"workload": "gc-min", "n": 3000, "m": 15000,
+                                 "batch": 20, "n_updates": 300,
+                                 "mix": [1, 3, 1], "results": mono,
+                                 "comm_reduction_rc_over_rp": mono_ratio,
+                                 "pull_reduction_rc_over_rp": pull_ratio}},
+                  f, indent=2)
     print(f"wrote {os.path.relpath(OUT_PATH)}", flush=True)
 
 

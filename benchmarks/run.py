@@ -142,6 +142,82 @@ def fig12_distributed():
             emit(parts[0], float(parts[1]), parts[2] if len(parts) > 2 else "")
 
 
+def bench_single():
+    """Machine-readable single-machine perf trajectory -> BENCH_single.json.
+
+    Per workload x engine (RIPPLE vs RC): median batch latency, updates/sec,
+    mean affected-per-hop profile, and for the monotonic aggregators the
+    SHRINK-event rate plus the filtered-propagation row accounting — RIPPLE
+    re-aggregates only covered-removal rows while RC re-aggregates every
+    affected row, so ``filtered_vs_rc`` records that contrast per shrink
+    batch.  ``RIPPLE_BENCH_SMOKE=1`` shrinks the run for CI.
+    """
+    import json
+
+    smoke = os.environ.get("RIPPLE_BENCH_SMOKE") == "1"
+    n_upd, bs = (180, 20) if smoke else (1800, 100)
+    workloads = ("gc-s", "gs-s", "gc-m", "gi-s", "gc-w", "gs-max", "gc-min")
+    records = []
+    for name in workloads:
+        for kind in ("ripple", "rc"):
+            wl, g, x, params, holdout = setup("arxiv-like", name, n_layers=2)
+            st = InferenceState.bootstrap(wl, params, x, g)
+            eng = engine_for(kind, wl, params, g, st)
+            mono = wl.spec.monotonic
+            # shrink-heavy, hot-vertex stream for the monotonic family;
+            # paper-protocol equal thirds otherwise
+            thr, lat, stats = run_stream(
+                eng, g, holdout, n_upd, bs, 64,
+                mix=(1, 3, 1) if mono else (1, 1, 1),
+                skew=0.8 if mono else 0.0)
+            lat = float(lat)
+            n_b = len(stats)
+            hops = max(len(s.affected_per_hop) for s in stats)
+            aff_hop = [float(np.mean([s.affected_per_hop[h] for s in stats
+                                      if len(s.affected_per_hop) > h]))
+                       for h in range(hops)]
+            rec = {"workload": name, "engine": kind,
+                   "aggregator": wl.spec.aggregator,
+                   "median_latency_s": lat,
+                   "updates_per_sec": float(thr),
+                   "mean_affected_per_hop": aff_hop,
+                   "rows_touched_per_batch":
+                       float(np.mean([s.total_affected for s in stats])),
+                   "rows_reaggregated_per_batch":
+                       float(np.mean([s.rows_reaggregated for s in stats])),
+                   "shrink_events_per_batch":
+                       float(np.mean([s.shrink_events for s in stats])),
+                   "n_batches": n_b, "batch_size": bs}
+            records.append(rec)
+            emit(f"single/{name}/{kind}", lat * 1e6,
+                 f"ups={rec['updates_per_sec']:.0f} "
+                 f"rows={rec['rows_touched_per_batch']:.0f} "
+                 f"shrink={rec['shrink_events_per_batch']:.1f}")
+    by = {(r["workload"], r["engine"]): r for r in records}
+    filtered = {}
+    for name in workloads:
+        rp, rc = by[(name, "ripple")], by[(name, "rc")]
+        if rp["aggregator"] not in ("max", "min"):
+            continue
+        filtered[name] = {
+            "ripple_rows_touched": rp["rows_touched_per_batch"],
+            "ripple_rows_reaggregated": rp["rows_reaggregated_per_batch"],
+            "rc_rows_reaggregated": rc["rows_reaggregated_per_batch"],
+            "rc_over_ripple_reagg": rc["rows_reaggregated_per_batch"]
+            / max(rp["rows_reaggregated_per_batch"], 1e-9)}
+        emit(f"single/filtered/{name}", 0.0,
+             f"rp_reagg={filtered[name]['ripple_rows_reaggregated']:.0f} "
+             f"rc_reagg={filtered[name]['rc_rows_reaggregated']:.0f} "
+             f"ratio={filtered[name]['rc_over_ripple_reagg']:.1f}x")
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_single.json")
+    with open(out, "w") as f:
+        json.dump({"bench": "single", "graph": "arxiv-like",
+                   "n_updates": n_upd, "batch_size": bs, "smoke": smoke,
+                   "results": records, "filtered_vs_rc": filtered}, f,
+                  indent=2)
+    print(f"wrote {os.path.relpath(out)}", flush=True)
+
+
 def roofline_table():
     """Echo the dry-run roofline terms (§Roofline) if the sweep has run."""
     import json
@@ -165,6 +241,7 @@ FIGS = {
     "fig10": fig10_three_layer,
     "fig11": fig11_latency_vs_affected,
     "fig12": fig12_distributed,
+    "single": bench_single,
     "roofline": roofline_table,
 }
 

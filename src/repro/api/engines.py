@@ -51,11 +51,15 @@ def _materialize_state(workload: Workload, params: list, graph: DynamicGraph,
                        state: InferenceState) -> InferenceState:
     """From-scratch layer-wise pass over the current graph + features,
     written into ``state`` in place (exact, the oracle's output)."""
+    from repro.core.aggregators import compute_contributors
+
     H, S = full_inference(workload, params, jnp.asarray(state.H[0]),
                           *graph.coo(), graph.in_degree)
     state.H = [np.array(h, dtype=np.float32) for h in H]
     state.S = [np.array(s, dtype=np.float32) for s in S]
     state.k = graph.in_degree.copy()
+    if workload.agg.tracks_contributors:
+        state.C = compute_contributors(workload.agg, state.H, state.S, graph)
     return state
 
 
@@ -75,7 +79,9 @@ class _HostAdapter:
                             wall_seconds=s.wall_seconds,
                             affected_per_hop=s.affected_per_hop,
                             messages_per_hop=s.messages_per_hop,
-                            numeric_ops=s.numeric_ops)
+                            numeric_ops=s.numeric_ops,
+                            shrink_events=s.shrink_events,
+                            rows_reaggregated=s.rows_reaggregated)
 
     def sync(self) -> InferenceState:
         return self._impl.state
@@ -126,6 +132,9 @@ class DeviceAdapter:
         for s_host, s_dev in zip(self._host.S, dev.S):
             s_host[...] = np.asarray(s_dev)
         self._host.k[...] = np.asarray(dev.k)
+        if self._host.C is not None:
+            for c_host, c_dev in zip(self._host.C, dev.C):
+                c_host[...] = np.asarray(c_dev)
         return self._host
 
     @property

@@ -60,6 +60,8 @@ class UpdateResult:
     affected_per_hop: list[int] = field(default_factory=list)
     messages_per_hop: list[int] = field(default_factory=list)
     numeric_ops: int = 0
+    shrink_events: int = 0      # monotonic aggregators: SHRINK messages
+    rows_reaggregated: int = 0  # monotonic aggregators: rows re-aggregated
 
     @property
     def total_affected(self) -> int:

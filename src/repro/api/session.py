@@ -173,8 +173,12 @@ class InferenceSession:
         return cls(workload, params, graph, state, engine, **opts)
 
     def make_stream(self, n_updates: int, seed: int = 1,
-                    feature_scale: float = 1.0) -> UpdateStream:
-        """Paper-protocol stream (§7.1.2) from the held-out edge split."""
+                    feature_scale: float = 1.0,
+                    mix: tuple[float, float, float] = (1.0, 1.0, 1.0),
+                    skew: float = 0.0) -> UpdateStream:
+        """Paper-protocol stream (§7.1.2) from the held-out edge split;
+        ``mix``/``skew`` expose the add/delete/feature ratio and hot-vertex
+        locality knobs of :func:`repro.data.streams.make_stream`."""
         if self.holdout is None:
             empty = (np.empty(0, np.int64), np.empty(0, np.int64),
                      np.empty(0, np.float32))
@@ -183,7 +187,7 @@ class InferenceSession:
             holdout = self.holdout
         return make_stream(self.graph, holdout, n_updates,
                            self.state.H[0].shape[1], seed=seed,
-                           feature_scale=feature_scale)
+                           feature_scale=feature_scale, mix=mix, skew=skew)
 
     # -- ingest -----------------------------------------------------------
     def ingest(self, updates, *, batch_size: int | None = None,
@@ -286,9 +290,12 @@ class InferenceSession:
         which is all ``restore_pytree`` needs for its template."""
         src, dst, w = self.graph.coo()
         st = self.sync() if sync else self.state
-        return {"H": list(st.H), "S": list(st.S), "k": st.k,
+        tree = {"H": list(st.H), "S": list(st.S), "k": st.k,
                 "src": src, "dst": dst, "w": w,
                 "step": np.int64(self.step)}
+        if st.C is not None:  # monotonic tracked contributors ride along
+            tree["C"] = list(st.C)
+        return tree
 
     def checkpoint(self) -> str:
         """Durably snapshot state + graph at the current step; returns the
@@ -324,7 +331,9 @@ class InferenceSession:
         self.state = InferenceState(
             H=[np.asarray(h, dtype=np.float32) for h in tree["H"]],
             S=[np.asarray(s, dtype=np.float32) for s in tree["S"]],
-            k=np.asarray(tree["k"], dtype=np.float32))
+            k=np.asarray(tree["k"], dtype=np.float32),
+            C=[np.asarray(c, dtype=np.int32) for c in tree["C"]]
+            if "C" in tree else None)
         self.step = int(tree["step"])
         self.engine = make_engine(self.engine_name, self.workload,
                                   self.params, self.graph, self.state,

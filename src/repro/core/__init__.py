@@ -3,7 +3,10 @@
 # distributed.py; TPU-jitted engine in device_engine.py.
 from .graph import (DynamicGraph, EdgeUpdate, FeatureUpdate,  # noqa: F401
                     UpdateBatch, erdos_renyi, powerlaw_graph)
-from .workloads import WORKLOAD_NAMES, Workload, make_workload  # noqa: F401
+from .aggregators import (AGGREGATOR_NAMES, Aggregator,  # noqa: F401
+                          InvertibleAgg, MonotonicAgg, get_aggregator)
+from .workloads import (MONOTONIC_WORKLOAD_NAMES, WORKLOAD_NAMES,  # noqa: F401
+                        Workload, make_workload)
 from .state import InferenceState, params_to_numpy  # noqa: F401
 from .full import full_inference, predict_labels  # noqa: F401
 from .engine import BatchStats, RecomputeEngine, RippleEngine  # noqa: F401

@@ -1,0 +1,223 @@
+"""Aggregator algebra: the per-aggregation-function contract behind RIPPLE.
+
+The paper's generalized incremental model (§4) "leverages the properties of
+the underlying aggregation functions".  Two algebra families cover every
+workload in this repo:
+
+**Invertible aggregators** (``sum`` / ``mean`` / ``wsum``).  The aggregate
+lives in a group: a contribution can be *retracted* by adding its inverse,
+so one delta mailbox per affected vertex is enough::
+
+    S' = S + sum(deltas) + sum(added h_old) - sum(deleted h_old)
+
+This is the original RIPPLE message algebra (engine.py's docstring carries
+the exactness proof sketch).  ``mean`` stays exact because the engines track
+the *unnormalized* (S, k) pair and normalize on read.
+
+**Monotonic aggregators** (``max`` / ``min``).  Not invertible — deleting
+the extremum cannot be undone by arithmetic — but *monotone*: a new
+contribution can only move the aggregate in one direction.  Exact
+incremental maintenance (InkStream, arXiv:2309.11071) therefore tracks,
+per vertex and per feature dimension,
+
+    * the extremum value itself (stored in the engine's ``S`` arrays, with
+      ``identity`` = -inf for max / +inf for min in empty rows), and
+    * a **contributor ref** ``C[v, d]``: the in-neighbor whose layer-l
+      embedding attains ``S[l+1][v, d]`` (-1 when the row is empty).
+
+Every incoming message is then classified:
+
+    GROW    the candidate value improves (or ties) the stored extremum —
+            fold it in with one elementwise min/max and update the
+            contributor ref.  Propagate further *only if the row actually
+            changed* (filtered propagation: covered candidates stop dead).
+    SHRINK  a covering contribution went away — the edge from the
+            contributor was deleted, or the contributor's value moved
+            strictly away from the extremum.  The extremum for that row is
+            no longer witnessed, so the engine **re-aggregates exactly that
+            row** over its current in-neighborhood (the
+            recompute-on-covered-removal fallback).  A re-aggregation that
+            reproduces the old value yields a zero delta and the wave stops.
+
+The invariant that makes classification sound: after every batch,
+``S[l+1][v, d] == H[l][C[l+1][v, d], d]`` for every non-empty row.  GROW
+writes the witnessing candidate; SHRINK re-derives value and witness
+together; and a contributor whose value changes is by construction in the
+frontier, so its probes re-establish the invariant at all out-neighbors.
+
+Engines consume this module instead of hard-coding the sum algebra:
+``Workload.agg`` yields the :class:`Aggregator` for the workload's spec,
+and the host/device/distributed paths branch on ``agg.invertible``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from enum import Enum
+
+import numpy as np
+
+
+class Event(Enum):
+    """Classification of one incoming message at a monotonic vertex row."""
+
+    GROW = "grow"      # propagate-if-changed: one elementwise min/max
+    SHRINK = "shrink"  # re-aggregate the touched row over its in-neighbors
+
+
+@dataclass(frozen=True)
+class Aggregator:
+    """One aggregation function's algebraic contract."""
+
+    name: str
+
+    @property
+    def invertible(self) -> bool:
+        return True
+
+    @property
+    def tracks_contributors(self) -> bool:
+        """Does state need per-(vertex, dim) contributor refs (``C``)?"""
+        return not self.invertible
+
+    @property
+    def weighted(self) -> bool:
+        return False
+
+    def normalize(self, S, k, xp=np):
+        """Aggregate -> UPDATE input (x = norm(S, k))."""
+        return S
+
+
+@dataclass(frozen=True)
+class InvertibleAgg(Aggregator):
+    """Group-structured aggregate: delta mailboxes retract exactly."""
+
+    uses_weights: bool = False
+    by_degree: bool = False  # mean: normalize the tracked raw sum by k
+
+    @property
+    def weighted(self) -> bool:
+        return self.uses_weights
+
+    def normalize(self, S, k, xp=np):
+        if self.by_degree:
+            return S / xp.maximum(k, 1.0)[:, None]
+        return S
+
+
+@dataclass(frozen=True)
+class MonotonicAgg(Aggregator):
+    """Order-structured aggregate (max/min) with tracked contributors.
+
+    ``sign`` maps the aggregator into max-space: max has sign=+1, min has
+    sign=-1 and all comparisons/reductions run on ``sign * value``.
+    """
+
+    sign: float = 1.0
+
+    @property
+    def invertible(self) -> bool:
+        return False
+
+    @property
+    def identity(self) -> float:
+        """Empty-row aggregate (never beats any candidate)."""
+        return -self.sign * np.inf
+
+    @property
+    def ufunc(self):
+        """The NumPy combine ufunc (supports ``.at`` scatter-reduce)."""
+        return np.maximum if self.sign > 0 else np.minimum
+
+    def segment_jnp(self, vals, seg, num_segments):
+        """jnp segment-reduce matching ``ufunc`` (empty rows -> identity)."""
+        import jax
+        op = jax.ops.segment_max if self.sign > 0 else jax.ops.segment_min
+        return op(vals, seg, num_segments=num_segments)
+
+    def improves(self, a, b):
+        """True where ``a`` is strictly better than ``b`` (elementwise)."""
+        return a > b if self.sign > 0 else a < b
+
+    def normalize(self, S, k, xp=np):
+        # identity rows (no in-neighbors) read as 0, matching segment_sum's
+        # empty-row convention for the invertible family
+        return xp.where(xp.isfinite(S), S, 0.0)
+
+
+SUM = InvertibleAgg("sum")
+MEAN = InvertibleAgg("mean", by_degree=True)
+WSUM = InvertibleAgg("wsum", uses_weights=True)
+MAX = MonotonicAgg("max", sign=1.0)
+MIN = MonotonicAgg("min", sign=-1.0)
+
+AGGREGATORS: dict[str, Aggregator] = {a.name: a for a in
+                                      (SUM, MEAN, WSUM, MAX, MIN)}
+AGGREGATOR_NAMES = tuple(AGGREGATORS)
+
+
+def get_aggregator(name: str) -> Aggregator:
+    try:
+        return AGGREGATORS[name]
+    except KeyError:
+        raise KeyError(f"unknown aggregator {name!r}; "
+                       f"known: {', '.join(AGGREGATORS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Host-side (NumPy) primitives shared by the engines
+# ---------------------------------------------------------------------------
+def np_segment_extremum(agg: MonotonicAgg, vals: np.ndarray, seg: np.ndarray,
+                        n_rows: int, src: np.ndarray
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Segment min/max with contributor refs.
+
+    ``vals [E, d]`` grouped by ``seg [E]`` into ``n_rows`` rows; ``src [E]``
+    is the contributing vertex id of each value.  Returns ``(S [n_rows, d],
+    C [n_rows, d])`` with identity / -1 in empty rows.  Contributor
+    tie-breaks are arbitrary (any witness is valid).
+    """
+    d = vals.shape[1]
+    S = np.full((n_rows, d), agg.identity, dtype=np.float32)
+    agg.ufunc.at(S, seg, vals)
+    C = np.full((n_rows, d), -1, dtype=np.int32)
+    if vals.shape[0]:
+        jj, dd = np.nonzero(vals == S[seg])
+        C[seg[jj], dd] = src[jj]
+    return S, C
+
+
+def np_shrink_mask(agg: MonotonicAgg, C_rows: np.ndarray, S_rows: np.ndarray,
+                   src: np.ndarray, vals: np.ndarray,
+                   is_del: np.ndarray) -> np.ndarray:
+    """Per-message SHRINK classification (GROW is the complement).
+
+    A message ``(src -> row)`` shrinks a dim when ``src`` is that dim's
+    tracked contributor and its contribution went away: the edge was
+    deleted, or the contributor's new value moved strictly off the stored
+    extremum.  Returns a per-message bool (any dim shrinks).
+    """
+    match = C_rows == src[:, None]
+    gone = is_del[:, None] | agg.improves(S_rows, vals)
+    return np.any(match & gone, axis=1)
+
+
+def compute_contributors(agg: MonotonicAgg, H: list[np.ndarray],
+                         S: list[np.ndarray],
+                         graph) -> list[np.ndarray]:
+    """Derive contributor refs for a bootstrapped/materialized state.
+
+    ``C[l][v, d]`` = an in-neighbor u with ``H[l-1][u, d] == S[l][v, d]``;
+    -1 where the row is empty.  ``C[0]`` is a placeholder for index
+    alignment with ``S``.
+    """
+    src, dst, _ = graph.coo()
+    C: list[np.ndarray] = [np.empty((0, 0), dtype=np.int32)]
+    for l in range(1, len(S)):
+        Cl = np.full(S[l].shape, -1, dtype=np.int32)
+        if src.size:
+            vals = H[l - 1][src]
+            jj, dd = np.nonzero(vals == S[l][dst])
+            Cl[dst[jj], dd] = src[jj]
+        C.append(Cl)
+    return C

@@ -18,6 +18,13 @@ fixed dataflow while the work stays proportional to the frontier size
 Overflow of any bucket is reported (never silently truncated); the caller
 retries with the next power-of-two bucket.  The function is functional
 (returns new state), so a failed attempt commits nothing.
+
+Monotonic workloads (max/min) run through ``propagate_monotonic`` instead:
+candidate extrema compact into per-row segment-max mailboxes, SHRINK rows
+(tracked contributor lost) pull their in-neighborhood from a mirrored
+in-CSR, and the next frontier keeps only rows whose embedding actually
+changed (filtered propagation) — see core/aggregators.py for the algebra
+and kernels/extremum_apply for the fused TPU apply of this family.
 """
 from __future__ import annotations
 
@@ -33,7 +40,7 @@ from .workloads import Workload
 
 
 class DeviceCSR(NamedTuple):
-    """Out-adjacency mirrored on device (slacked-CSR pool layout)."""
+    """One adjacency half mirrored on device (slacked-CSR pool layout)."""
 
     col: jax.Array    # [pool] int32, -1 in slack slots
     w: jax.Array      # [pool] f32
@@ -41,17 +48,23 @@ class DeviceCSR(NamedTuple):
     length: jax.Array  # [n] int32
 
     @classmethod
+    def from_half(cls, half) -> "DeviceCSR":
+        return cls(col=jnp.asarray(half.col, dtype=jnp.int32),
+                   w=jnp.asarray(half.w),
+                   start=jnp.asarray(half.start, dtype=jnp.int32),
+                   length=jnp.asarray(half.length, dtype=jnp.int32))
+
+    @classmethod
     def from_graph(cls, g: DynamicGraph) -> "DeviceCSR":
-        return cls(col=jnp.asarray(g.out.col, dtype=jnp.int32),
-                   w=jnp.asarray(g.out.w),
-                   start=jnp.asarray(g.out.start, dtype=jnp.int32),
-                   length=jnp.asarray(g.out.length, dtype=jnp.int32))
+        return cls.from_half(g.out)
 
 
 class DeviceState(NamedTuple):
     H: tuple[jax.Array, ...]  # [n, d_l] per layer 0..L
     S: tuple[jax.Array, ...]  # [n, d_{l-1}] per layer 1..L ([0] placeholder)
     k: jax.Array              # [n] in-degree
+    C: tuple[jax.Array, ...] = ()  # monotonic contributor refs (int32,
+    #                                index-aligned with S; () if invertible)
 
 
 class BatchDev(NamedTuple):
@@ -158,7 +171,7 @@ def _apply_hop(workload: Workload, params_l: dict, layer: int, n: int,
     new_state = DeviceState(
         H=state.H[: layer + 1] + (H_next,) + state.H[layer + 2:],
         S=state.S[: layer + 1] + (S_next,) + state.S[layer + 2:],
-        k=state.k)
+        k=state.k, C=state.C)
     return new_state, delta
 
 
@@ -179,7 +192,8 @@ def propagate(workload: Workload, n: int, caps: tuple[tuple[int, int], ...],
     old = state.H[0][jnp.minimum(fv, n - 1)]
     delta0 = (batch.feat_val - old) * (fv < n)[:, None]
     H0 = state.H[0].at[fv].set(batch.feat_val, mode="drop")
-    state = DeviceState(H=(H0,) + state.H[1:], S=state.S, k=state.k)
+    state = DeviceState(H=(H0,) + state.H[1:], S=state.S, k=state.k,
+                        C=state.C)
     frontier, delta = fv, delta0
     overflow = jnp.zeros((), dtype=bool)
 
@@ -195,6 +209,174 @@ def propagate(workload: Workload, n: int, caps: tuple[tuple[int, int], ...],
                                   mailbox)
         frontier = rec_idx
 
+    return state, frontier, overflow
+
+
+# ---------------------------------------------------------------------------
+# Monotonic (max/min) propagation: GROW via candidate segment-extremum,
+# SHRINK via per-row in-neighborhood pulls, filtered frontier (see
+# core/aggregators.py for the algebra; host mirror in engine.py).
+# ---------------------------------------------------------------------------
+def _ragged_gather(n: int, csr: DeviceCSR, rows: jax.Array, degs: jax.Array,
+                   cap: int):
+    """Expand the CSR rows' adjacency lists into one static bucket.
+
+    ``rows [R]`` are sentinel-clamped vertex ids with per-row counts
+    ``degs [R]`` (0 for rows to skip).  Returns (cols [cap] sentinel-n
+    padded, fid [cap] source row slot, valid [cap], total_needed).
+    """
+    r_cap = rows.shape[0]
+    csum = jnp.cumsum(degs)
+    total = csum[-1] if r_cap else jnp.int32(0)
+    e = jnp.arange(cap, dtype=jnp.int32)
+    fid = jnp.minimum(jnp.searchsorted(csum, e, side="right").astype(jnp.int32),
+                      r_cap - 1)
+    off = e - (csum[fid] - degs[fid])
+    valid = e < total
+    flat = jnp.where(valid,
+                     csr.start[jnp.minimum(rows[fid], n - 1)] + off, 0)
+    cols = jnp.where(valid, csr.col[flat], n)
+    return cols, fid, valid, total
+
+
+def _expand_frontier_edges(n: int, csr: DeviceCSR, frontier: jax.Array,
+                           e_cap: int):
+    """Ragged gather of frontier out-edges into a static bucket.
+
+    Returns (edst [e_cap], esrc [e_cap], n_edges_needed); sentinel n pads.
+    """
+    degs = jnp.where(frontier < n, csr.length[jnp.minimum(frontier, n - 1)], 0)
+    edst, fid, evalid, total = _ragged_gather(n, csr, frontier, degs, e_cap)
+    esrc = jnp.where(evalid, frontier[fid], n)
+    return edst, esrc, total
+
+
+def _monotonic_hop(workload: Workload, params_l: dict, layer: int, n: int,
+                   state: DeviceState, out_csr: DeviceCSR, in_csr: DeviceCSR,
+                   batch: BatchDev, frontier: jax.Array, *,
+                   r_cap: int, e_cap: int, p_cap: int):
+    """One GROW/SHRINK hop layer -> layer+1; returns (state, frontier', ovf).
+
+    All extremum arithmetic runs in max-space (``sign * value``) so one code
+    path serves both max and min.
+    """
+    agg = workload.agg
+    sign = agg.sign
+    H_l, S_next, C_next = state.H[layer], state.S[layer + 1], state.C[layer + 1]
+    NEG = jnp.float32(-jnp.inf)
+
+    edst, esrc, needed = _expand_frontier_edges(n, out_csr, frontier, e_cap)
+    overflow = needed > e_cap
+
+    # unified message stream: frontier edges + adds are candidates AND
+    # probes; deletes are probes only (their value must never grow S)
+    msg_dst = jnp.concatenate([edst, batch.add_dst, batch.del_dst])
+    msg_src = jnp.concatenate([esrc, batch.add_src, batch.del_src])
+    n_cand = edst.shape[0] + batch.add_dst.shape[0]
+    is_del = jnp.arange(msg_dst.shape[0]) >= n_cand
+    valid = (msg_dst < n) & (msg_src < n)
+
+    # affected rows = unique message dsts (+ frontier for self-dependence)
+    all_dst = msg_dst
+    if workload.spec.self_dependent:
+        all_dst = jnp.concatenate([all_dst, frontier])
+    rec_idx, _, n_rec = _compact_mailbox(
+        n, all_dst, jnp.zeros((all_dst.shape[0], 1), H_l.dtype), r_cap)
+    overflow |= n_rec > r_cap
+    aff_c = jnp.minimum(rec_idx, n - 1)
+
+    pos = jnp.full((n + 1,), r_cap, dtype=jnp.int32)
+    pos = pos.at[rec_idx].set(jnp.arange(r_cap, dtype=jnp.int32), mode="drop")
+    slot = jnp.where(valid, pos[jnp.minimum(msg_dst, n)], r_cap)
+
+    vals_ms = sign * H_l[jnp.minimum(msg_src, n - 1)]  # max-space values
+
+    # ---- SHRINK classification against tracked (S, C) --------------------
+    S_dst_ms = sign * S_next[jnp.minimum(msg_dst, n - 1)]
+    C_dst = C_next[jnp.minimum(msg_dst, n - 1)]
+    covered = C_dst == msg_src[:, None].astype(C_dst.dtype)
+    gone = is_del[:, None] | (S_dst_ms > vals_ms)
+    shrink_msg = (jnp.any(covered & gone, axis=1) & valid).astype(jnp.int32)
+    row_shrink = jax.ops.segment_max(shrink_msg, slot,
+                                     num_segments=r_cap + 1)[:r_cap] > 0
+
+    # ---- SHRINK rows: pull + re-aggregate their current in-neighborhood --
+    degs = jnp.where(row_shrink & (rec_idx < n), in_csr.length[aff_c], 0)
+    psrc, fid, pvalid, pull_total = _ragged_gather(n, in_csr, aff_c, degs,
+                                                   p_cap)
+    overflow |= pull_total > p_cap
+    pv = jnp.where(pvalid[:, None], sign * H_l[jnp.minimum(psrc, n - 1)], NEG)
+    pseg = jnp.where(pvalid, fid, r_cap)
+    S_sh = jax.ops.segment_max(pv, pseg, num_segments=r_cap + 1)[:r_cap]
+    win_p = (pv == S_sh[fid]) & pvalid[:, None]
+    C_sh = jax.ops.segment_max(
+        jnp.where(win_p, psrc[:, None].astype(jnp.int32), -1), pseg,
+        num_segments=r_cap + 1)[:r_cap]
+    C_sh = jnp.maximum(C_sh, -1)  # empty segments: int identity -> -1
+
+    base_S = jnp.where(row_shrink[:, None], S_sh, sign * S_next[aff_c])
+    base_C = jnp.where(row_shrink[:, None], C_sh, C_next[aff_c])
+
+    # ---- GROW: fold candidates in (idempotent on re-aggregated rows) -----
+    is_cand = valid & ~is_del
+    cv = jnp.where(is_cand[:, None], vals_ms, NEG)
+    cslot = jnp.where(is_cand, slot, r_cap)
+    S_cand = jax.ops.segment_max(cv, cslot, num_segments=r_cap + 1)[:r_cap]
+    S_ms = jnp.maximum(base_S, S_cand)
+    win_c = (cv == S_ms[jnp.minimum(cslot, r_cap - 1)]) & is_cand[:, None]
+    C_cand = jax.ops.segment_max(
+        jnp.where(win_c, msg_src[:, None].astype(jnp.int32), -1), cslot,
+        num_segments=r_cap + 1)[:r_cap]
+    C_new = jnp.where(C_cand >= 0, C_cand, base_C)
+    S_new = sign * S_ms
+
+    # ---- apply + filtered propagation ------------------------------------
+    x = workload.normalize(S_new, state.k[aff_c])
+    h_new = workload.update_fn(layer)(params_l, H_l[aff_c], x)
+    changed = jnp.any(h_new != state.H[layer + 1][aff_c], axis=1) \
+        & (rec_idx < n)
+    S_out = S_next.at[rec_idx].set(S_new, mode="drop")
+    C_out = C_next.at[rec_idx].set(C_new, mode="drop")
+    H_out = state.H[layer + 1].at[rec_idx].set(h_new, mode="drop")
+    new_state = DeviceState(
+        H=state.H[: layer + 1] + (H_out,) + state.H[layer + 2:],
+        S=state.S[: layer + 1] + (S_out,) + state.S[layer + 2:],
+        k=state.k,
+        C=state.C[: layer + 1] + (C_out,) + state.C[layer + 2:])
+    frontier_next = jnp.where(changed, rec_idx, n)
+    return new_state, frontier_next, overflow
+
+
+@partial(jax.jit, static_argnames=("workload", "n", "caps"))
+def propagate_monotonic(workload: Workload, n: int,
+                        caps: tuple[tuple[int, int, int], ...],
+                        params: list[dict], state: DeviceState,
+                        out_csr: DeviceCSR, in_csr: DeviceCSR,
+                        batch: BatchDev):
+    """L-hop monotonic (max/min) propagation of a routed batch.
+
+    caps[l] = (row_cap, edge_cap, pull_cap) at hop l; pull_cap bounds the
+    total in-degree of SHRINK rows re-aggregated that hop.  Returns
+    (new_state, final frontier idx, overflow flag) — functional like
+    ``propagate``, so an overflowing attempt commits nothing.
+    """
+    L = workload.spec.n_layers
+
+    fv = batch.feat_idx
+    old = state.H[0][jnp.minimum(fv, n - 1)]
+    changed0 = jnp.any(batch.feat_val != old, axis=1) & (fv < n)
+    H0 = state.H[0].at[fv].set(batch.feat_val, mode="drop")
+    state = DeviceState(H=(H0,) + state.H[1:], S=state.S, k=state.k,
+                        C=state.C)
+    frontier = jnp.where(changed0, fv, n)  # hop-0 filtering: no-op writes stop
+    overflow = jnp.zeros((), dtype=bool)
+
+    for l in range(L):
+        r_cap, e_cap, p_cap = caps[l]
+        state, frontier, ovf = _monotonic_hop(
+            workload, params[l], l, n, state, out_csr, in_csr, batch,
+            frontier, r_cap=r_cap, e_cap=e_cap, p_cap=p_cap)
+        overflow |= ovf
     return state, frontier, overflow
 
 
@@ -217,7 +399,9 @@ class DeviceEngine:
         self.state = DeviceState(
             H=tuple(jnp.asarray(h) for h in state_np.H),
             S=tuple(jnp.asarray(s) for s in state_np.S),
-            k=jnp.asarray(graph.in_degree))
+            k=jnp.asarray(graph.in_degree),
+            C=tuple(jnp.asarray(c, dtype=jnp.int32) for c in state_np.C)
+            if state_np.C is not None else ())
         self.min_bucket = min_bucket
 
     def _pad_batch(self, batch) -> BatchDev:
@@ -250,22 +434,30 @@ class DeviceEngine:
 
     def apply_batch(self, batch) -> np.ndarray:
         """Returns final-hop affected vertex ids."""
+        monotonic = not self.workload.agg.invertible
         dev_batch = self._pad_batch(batch)
         csr = DeviceCSR.from_graph(self.graph)
+        in_csr = DeviceCSR.from_half(self.graph.inn) if monotonic else None
         L = self.workload.spec.n_layers
+        e_max = self._next_bucket(max(self.graph.num_edges, 1)) * 2
         r = max(self.min_bucket, int(dev_batch.feat_idx.shape[0]))
         e = 4 * r
         while True:
             caps = []
             rr, ee = r, e
             for _ in range(L):
-                caps.append((rr, ee))
+                caps.append((rr, ee, min(ee, e_max)) if monotonic
+                            else (rr, ee))
                 rr = min(self._next_bucket(rr * 4), self._next_bucket(self.n))
-                ee = min(self._next_bucket(ee * 4),
-                         self._next_bucket(max(self.graph.num_edges, 1)) * 2)
-            new_state, final, overflow = propagate(
-                self.workload, self.n, tuple(caps), self.params, self.state,
-                csr, dev_batch)
+                ee = min(self._next_bucket(ee * 4), e_max)
+            if monotonic:
+                new_state, final, overflow = propagate_monotonic(
+                    self.workload, self.n, tuple(caps), self.params,
+                    self.state, csr, in_csr, dev_batch)
+            else:
+                new_state, final, overflow = propagate(
+                    self.workload, self.n, tuple(caps), self.params,
+                    self.state, csr, dev_batch)
             if not bool(overflow):
                 self.state = new_state
                 f = np.asarray(final)

@@ -17,6 +17,12 @@ The partitioned adjacency fed to the jitted propagate is an
 maintenance touches only the rows hit by the batch (vectorized row
 refresh); the full vectorized rebuild runs only when a row outgrows its
 slack or the pool bucket changes — never once per batch.
+
+Monotonic workloads (max/min) additionally carry contributor-ref arrays
+``C`` on the mesh (relabeled ids; scattered on entry, mapped back to
+original ids on gather) and maintain the in-adjacency mirror in every
+mode, since SHRINK rows re-aggregate via request/response pulls (see
+distributed.make_monotonic_propagate and core/aggregators.py).
 """
 from __future__ import annotations
 
@@ -27,8 +33,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.utils import next_bucket
-from .distributed import (DistBatch, DistCSR, make_rc_propagate,
-                          make_ripple_propagate)
+from .distributed import (DistBatch, DistCSR, make_monotonic_propagate,
+                          make_rc_propagate, make_ripple_propagate)
 from .graph import DynamicGraph, UpdateBatch, flat_row_indices
 from .partition import Partitioning, ldg_partition
 from .state import InferenceState
@@ -147,14 +153,22 @@ class DistEngine:
                               self.part.new_of_old[dst], w)
         self.params = [{k: jnp.asarray(v) for k, v in p.items()}
                        for p in params]
+        self.monotonic = not workload.agg.invertible
         # scatter the host state onto the mesh layout — entry migration is
         # a relabel, not a recomputation, so host->mesh swap is exact
         self.H = tuple(self._scatter(h) for h in state.H)
         self.S = (jnp.zeros((self.n_parts, self.n_local, 1)),) \
             + tuple(self._scatter(s) for s in state.S[1:])
+        # monotonic workloads: contributor refs ride along, relabeled into
+        # the partition-contiguous id space (sentinel -1 preserved)
+        self.C = (jnp.zeros((self.n_parts, self.n_local, 1), jnp.int32),) \
+            + tuple(self._scatter_ids(c) for c in state.C[1:]) \
+            if self.monotonic else None
         self.out_csr = PartitionedCSR(self.g.out, self.part)
+        # the in-adjacency backs RC's pull-everything re-aggregation AND the
+        # monotonic family's shrink re-aggregation requests
         self.in_csr = PartitionedCSR(self.g.inn, self.part) \
-            if mode == "rc" else None
+            if (mode == "rc" or self.monotonic) else None
         self._fn_cache: dict = {}
         self.last_comm = None  # per-hop exchanged slot counts (paper fig12c)
         self.last_host_seconds = 0.0   # routing + CSR maintenance per batch
@@ -164,6 +178,16 @@ class DistEngine:
         """[n, d] host array in original id order -> [P, n_local, d]."""
         pad = np.zeros((self.part.n_pad, arr.shape[1]), dtype=np.float32)
         pad[self.part.new_of_old] = arr
+        return jnp.asarray(pad.reshape(self.n_parts, self.n_local, -1))
+
+    def _scatter_ids(self, arr: np.ndarray) -> jax.Array:
+        """Contributor-ref scatter: [n, d] original-id refs -> [P, n_local,
+        d] relabeled refs (-1 sentinel preserved, pad rows are -1)."""
+        relab = np.where(arr >= 0,
+                         self.part.new_of_old[np.maximum(arr, 0)],
+                         -1).astype(np.int32)
+        pad = np.full((self.part.n_pad, arr.shape[1]), -1, dtype=np.int32)
+        pad[self.part.new_of_old] = relab
         return jnp.asarray(pad.reshape(self.n_parts, self.n_local, -1))
 
     def _gather(self, arr: jax.Array) -> np.ndarray:
@@ -178,6 +202,11 @@ class DistEngine:
             state.H[l][...] = self._gather(h)
         for l in range(1, len(self.S)):
             state.S[l][...] = self._gather(self.S[l])
+        if self.monotonic and state.C is not None:
+            for l in range(1, len(self.C)):
+                relab = self._gather(self.C[l])
+                state.C[l][...] = np.where(
+                    relab >= 0, self.part.old_of_new[np.maximum(relab, 0)], -1)
         state.k[...] = self.host_graph.in_degree
         return state
 
@@ -268,7 +297,7 @@ class DistEngine:
         dist_batch = self._route(batch)
         k = jnp.asarray(self.g.in_degree.reshape(self.n_parts, self.n_local))
         out_csr = self.out_csr.device()
-        in_csr = self.in_csr.device() if self.mode == "rc" else None
+        in_csr = self.in_csr.device() if self.in_csr is not None else None
         self.last_host_seconds = time.perf_counter() - t_host
 
         r = max(self.min_bucket, int(dist_batch.feat_idx.shape[1]) * 2)
@@ -282,9 +311,15 @@ class DistEngine:
             for _ in range(L):
                 caps.append((min(rr, nl_b), ee))
                 rr, ee = rr * 4, ee * 4
-            key = (self.mode, tuple(caps), halo, pull)
+            kind = "mono" if self.monotonic else self.mode
+            key = (kind, self.mode, tuple(caps), halo, pull)
             if key not in self._fn_cache:
-                if self.mode == "ripple":
+                if self.monotonic:
+                    self._fn_cache[key] = make_monotonic_propagate(
+                        self.mesh, self.workload, self.n_local, tuple(caps),
+                        halo, pull, data_axes=self.data_axes,
+                        rc=self.mode == "rc")
+                elif self.mode == "ripple":
                     self._fn_cache[key] = make_ripple_propagate(
                         self.mesh, self.workload, self.n_local, tuple(caps),
                         halo, data_axes=self.data_axes)
@@ -293,7 +328,11 @@ class DistEngine:
                         self.mesh, self.workload, self.n_local, tuple(caps),
                         halo, pull, data_axes=self.data_axes)
             fn = self._fn_cache[key]
-            if self.mode == "ripple":
+            if self.monotonic:
+                H, S, C, final, ovf, comm = fn(self.params, self.H, self.S,
+                                               self.C, k, out_csr, in_csr,
+                                               dist_batch)
+            elif self.mode == "ripple":
                 H, S, final, ovf, comm = fn(self.params, self.H, self.S, k,
                                             out_csr, dist_batch)
             else:
@@ -302,6 +341,8 @@ class DistEngine:
             if float(ovf) == 0.0:
                 jax.block_until_ready(H)
                 self.H, self.S = H, S
+                if self.monotonic:
+                    self.C = C
                 self.last_comm = np.asarray(comm)
                 f = np.asarray(final).reshape(-1)
                 offs = np.repeat(np.arange(self.n_parts) * self.n_local,

@@ -117,6 +117,53 @@ def _exchange(ids: jax.Array, vals: jax.Array, axis="data"):
     return rid, rval
 
 
+def _pull_in_neighbors(n_parts: int, n_local: int, n_pad: int, dax, me,
+                       h_l: jax.Array, in_csr: "DistCSR", aff_c: jax.Array,
+                       degs: jax.Array, pull_cap: int, r_cap: int):
+    """Ragged in-CSR expansion of the given rows + request/response pull of
+    the (possibly remote) source embeddings — the shared machinery behind
+    RC's pull-everything re-aggregation and the monotonic family's
+    SHRINK-only re-aggregation requests.
+
+    ``aff_c [r_cap]`` are clamped local row ids, ``degs [r_cap]`` their
+    pull counts (0 skips a row).  Returns (got [pull_cap, d] pulled values
+    aligned with the expansion, src_g [pull_cap] global source ids, fid
+    [pull_cap] row slot per pulled edge, evalid [pull_cap], ew [pull_cap]
+    edge weights, comm_req globally-summed remote request slots, overflow).
+    """
+    csum = jnp.cumsum(degs)
+    total = csum[-1]
+    e = jnp.arange(pull_cap, dtype=jnp.int32)
+    fid = jnp.minimum(jnp.searchsorted(csum, e, side="right").astype(jnp.int32),
+                      r_cap - 1)
+    off = e - (csum[fid] - degs[fid])
+    evalid = e < total
+    flat = jnp.where(evalid, in_csr.start[aff_c[fid]] + off, 0)
+    src_g = jnp.where(evalid, in_csr.col[flat], n_pad)
+    ew = in_csr.w[flat]
+
+    # request/response: route src ids to owners, owners reply values
+    req_ids, req_slot, counts, ovf = _pack_by_partition(
+        n_parts, n_local, pull_cap, src_g,
+        jnp.arange(pull_cap, dtype=jnp.float32)[:, None])
+    comm_req = jax.lax.psum(counts.sum() - counts[me], dax)
+    r_req, _ = _exchange(req_ids, req_slot, dax)
+    vals_resp = h_l[jnp.minimum(r_req, n_local - 1)] \
+        * (r_req < n_local)[..., None]
+    # respond: send values straight back (reverse exchange); block layout
+    # is preserved, so row p of the reply aligns position-wise with the
+    # requests originally packed for owner p
+    _, back_vals = _exchange(r_req, vals_resp, dax)
+    # place returned values into their pull slots (my original buffers)
+    slot = req_slot[..., 0].astype(jnp.int32).reshape(-1)
+    filled = (req_ids < n_local).reshape(-1)
+    got = jnp.zeros((pull_cap,) + h_l.shape[1:], h_l.dtype)
+    got = got.at[jnp.where(filled, slot, pull_cap)].set(
+        back_vals.reshape((-1,) + back_vals.shape[2:]), mode="drop")
+    overflow = (total > pull_cap) | ovf
+    return got, src_g, fid, evalid, ew, comm_req, overflow
+
+
 def _local_frontier_messages(n_local: int, n_pad: int, h_l: jax.Array,
                              col, w, start, length,
                              frontier: jax.Array, delta: jax.Array,
@@ -279,6 +326,222 @@ def make_ripple_propagate(mesh, workload: Workload, n_local: int,
 
 
 # ---------------------------------------------------------------------------
+# Distributed monotonic (max/min) propagation: candidate-extremum mailboxes
+# + shrink re-aggregation pulls (see core/aggregators.py for the algebra)
+# ---------------------------------------------------------------------------
+def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
+                             caps: tuple, halo_cap: int, pull_cap: int,
+                             data_axes: tuple = ("data",), *,
+                             rc: bool = False):
+    """Distributed GROW/SHRINK propagation for max/min workloads.
+
+    Mailboxes ship *candidate extrema* (value + global source id + delete
+    flag) to the owner of each destination; the owner classifies every
+    message against its tracked (S, C) rows.  SHRINK rows re-aggregate over
+    their current in-neighborhood via a request/response pull — remote
+    embeddings are fetched for exactly the covered-removal rows, which is
+    the communication contrast ``dist_bench`` measures against ``rc=True``
+    (the unfiltered baseline: every affected row re-aggregates and the
+    frontier never filters, i.e. distributed RC for the monotonic family).
+
+    Contributor ids ride the halo exchange as float32 payload channels, so
+    the relabeled id space must stay below 2^24 (exact float32 integers).
+    """
+    import math
+    n_parts = math.prod(mesh.shape[a] for a in data_axes)
+    dax = data_axes if len(data_axes) > 1 else data_axes[0]
+    n_pad = n_parts * n_local
+    if n_pad >= 1 << 24:
+        raise ValueError(
+            f"monotonic propagate: padded id space {n_pad} exceeds 2^24 — "
+            "contributor ids ride the halo as float32 and would lose "
+            "exactness; shard the graph over more partitions")
+    spec = workload.spec
+    agg = workload.agg
+    sign = agg.sign
+    L = spec.n_layers
+    NEG = jnp.float32(-jnp.inf)
+
+    def local_fn(params, H, S, C, k, out_csr: DistCSR, in_csr: DistCSR,
+                 batch: DistBatch):
+        sq = lambda t: jax.tree.map(lambda a: a[0], t)
+        H, S, C, k, out_csr, in_csr, batch = (
+            sq(H), sq(S), sq(C), sq(k), sq(out_csr), sq(in_csr), sq(batch))
+        me = jax.lax.axis_index(dax)
+
+        # hop 0: feature updates; no-op writes are filtered out immediately
+        fv = batch.feat_idx
+        old = H[0][jnp.minimum(fv, n_local - 1)]
+        # value-dependent decisions must agree across MODEL shards (each
+        # holds d/M dims): reduce "changed in any dim" over the model axis
+        changed0 = jax.lax.psum(
+            (jnp.any(batch.feat_val != old, axis=1) & (fv < n_local)
+             ).astype(jnp.float32), "model") > 0
+        H = (H[0].at[fv].set(batch.feat_val, mode="drop"),) + H[1:]
+        frontier = fv if rc else jnp.where(changed0, fv, n_local)
+        overflow = jnp.zeros((), bool)
+        comm = []
+
+        for l in range(L):
+            r_cap, e_cap = caps[l]
+            d_loc = H[l].shape[1]
+
+            # ---- local frontier out-edge expansion (global dst ids) ------
+            f_cap = frontier.shape[0]
+            degs = jnp.where(frontier < n_local,
+                             out_csr.length[jnp.minimum(frontier, n_local - 1)], 0)
+            csum = jnp.cumsum(degs)
+            total = csum[-1]
+            overflow |= total > e_cap
+            e = jnp.arange(e_cap, dtype=jnp.int32)
+            fid = jnp.minimum(
+                jnp.searchsorted(csum, e, side="right").astype(jnp.int32),
+                f_cap - 1)
+            off = e - (csum[fid] - degs[fid])
+            vsrc = frontier[fid]
+            evalid = e < total
+            flat = jnp.where(evalid,
+                             out_csr.start[jnp.minimum(vsrc, n_local - 1)] + off,
+                             0)
+            edst_g = jnp.where(evalid, out_csr.col[flat], n_pad)
+            esrc_l = jnp.where(evalid, vsrc, n_local)
+
+            # ---- unified message stream (frontier+adds: cand&probe;
+            #      dels: probe-only) with payload [val, src_g, is_del] ------
+            dst_g = jnp.concatenate([edst_g, batch.add_dst, batch.del_dst])
+            src_l = jnp.concatenate([esrc_l, batch.add_src, batch.del_src])
+            n_cand = e_cap + batch.add_src.shape[0]
+            is_del = (jnp.arange(dst_g.shape[0]) >= n_cand).astype(jnp.float32)
+            mvalid = (src_l < n_local) & (dst_g < n_pad)
+            src_g = jnp.where(mvalid, me * n_local + src_l, n_pad)
+            vals = H[l][jnp.minimum(src_l, n_local - 1)]
+            payload = jnp.concatenate(
+                [vals, src_g[:, None].astype(jnp.float32), is_del[:, None]],
+                axis=1)
+            dst_g = jnp.where(mvalid, dst_g, n_pad)
+
+            ids, buf, counts, ovf = _pack_by_partition(
+                n_parts, n_local, halo_cap, dst_g, payload)
+            overflow |= ovf
+            halo_remote = counts.sum() - counts[me]
+            rid, rpay = _exchange(ids, buf, dax)
+            mdst = rid.reshape(-1)
+            rpay = rpay.reshape(-1, d_loc + 2)
+            rval_ms = sign * rpay[:, :d_loc]
+            rsrc_g = rpay[:, d_loc].astype(jnp.int32)
+            rdel = rpay[:, d_loc + 1] > 0.5
+            rvalid = mdst < n_local
+
+            # ---- affected rows (+ frontier for self-dependence) ----------
+            all_dst = jnp.concatenate([mdst, frontier]) \
+                if spec.self_dependent else mdst
+            rec_idx, _, n_rec = _compact_mailbox(
+                n_local, all_dst, jnp.zeros((all_dst.shape[0], 1), H[l].dtype),
+                r_cap)
+            overflow |= n_rec > r_cap
+            aff_c = jnp.minimum(rec_idx, n_local - 1)
+            pos = jnp.full((n_local + 1,), r_cap, dtype=jnp.int32)
+            pos = pos.at[rec_idx].set(jnp.arange(r_cap, dtype=jnp.int32),
+                                      mode="drop")
+            slot = jnp.where(rvalid, pos[jnp.minimum(mdst, n_local)], r_cap)
+
+            # ---- SHRINK classification against tracked (S, C) ------------
+            S_dst_ms = sign * S[l + 1][jnp.minimum(mdst, n_local - 1)]
+            C_dst = C[l + 1][jnp.minimum(mdst, n_local - 1)]
+            covered = C_dst == rsrc_g[:, None]
+            gone = rdel[:, None] | (S_dst_ms > rval_ms)
+            shrink_msg = (jnp.any(covered & gone, axis=1) & rvalid
+                          ).astype(jnp.int32)
+            # model-consistent: a row shrinks if ANY of its d dims (spread
+            # over the model shards) lost a covering contribution
+            row_shrink = jax.lax.psum(
+                jax.ops.segment_max(shrink_msg, slot,
+                                    num_segments=r_cap + 1)[:r_cap]
+                .astype(jnp.float32), "model") > 0
+            if rc:  # unfiltered baseline: every affected row re-aggregates
+                row_shrink = rec_idx < n_local
+
+            # ---- SHRINK rows: pull their in-neighborhoods ----------------
+            pdegs = jnp.where(row_shrink & (rec_idx < n_local),
+                              in_csr.length[aff_c], 0)
+            got, psrc_g, pfid, pvalid, _ew, comm_req, p_ovf = \
+                _pull_in_neighbors(n_parts, n_local, n_pad, dax, me, H[l],
+                                   in_csr, aff_c, pdegs, pull_cap, r_cap)
+            overflow |= p_ovf
+            # comm accounting, two slots per hop: candidate-halo traffic
+            # (paid by both modes) and re-aggregation pull traffic (the
+            # SHRINK-only vs pull-everything contrast dist_bench measures;
+            # each requested id comes back as one value slot)
+            comm.append(jax.lax.psum(halo_remote, dax))
+            comm.append(2 * comm_req)
+
+            pv = jnp.where(pvalid[:, None], sign * got, NEG)
+            pseg = jnp.where(pvalid, pfid, r_cap)
+            S_sh = jax.ops.segment_max(pv, pseg, num_segments=r_cap + 1)[:r_cap]
+            win_p = (pv == S_sh[pfid]) & pvalid[:, None]
+            C_sh = jax.ops.segment_max(
+                jnp.where(win_p, psrc_g[:, None], -1), pseg,
+                num_segments=r_cap + 1)[:r_cap]
+            C_sh = jnp.maximum(C_sh, -1)
+
+            base_S = jnp.where(row_shrink[:, None], S_sh,
+                               sign * S[l + 1][aff_c])
+            base_C = jnp.where(row_shrink[:, None], C_sh, C[l + 1][aff_c])
+
+            # ---- GROW: fold candidates in --------------------------------
+            is_cand = rvalid & ~rdel
+            cv = jnp.where(is_cand[:, None], rval_ms, NEG)
+            cslot = jnp.where(is_cand, slot, r_cap)
+            S_cand = jax.ops.segment_max(cv, cslot,
+                                         num_segments=r_cap + 1)[:r_cap]
+            S_ms = jnp.maximum(base_S, S_cand)
+            win_c = (cv == S_ms[jnp.minimum(cslot, r_cap - 1)]) \
+                & is_cand[:, None]
+            C_cand = jax.ops.segment_max(
+                jnp.where(win_c, rsrc_g[:, None], -1), cslot,
+                num_segments=r_cap + 1)[:r_cap]
+            C_new = jnp.where(C_cand >= 0, C_cand, base_C)
+            S_new = sign * S_ms
+
+            # ---- apply + (filtered) propagation --------------------------
+            x = agg.normalize(S_new, k[aff_c], xp=jnp)
+            h_new = tp_update(workload, params[l], l, H[l][aff_c], x)
+            changed = jax.lax.psum(
+                (jnp.any(h_new != H[l + 1][aff_c], axis=1)
+                 & (rec_idx < n_local)).astype(jnp.float32), "model") > 0
+            S = S[: l + 1] + (S[l + 1].at[rec_idx].set(S_new, mode="drop"),) \
+                + S[l + 2:]
+            C = C[: l + 1] + (C[l + 1].at[rec_idx].set(C_new, mode="drop"),) \
+                + C[l + 2:]
+            H = H[: l + 1] + (H[l + 1].at[rec_idx].set(h_new, mode="drop"),) \
+                + H[l + 2:]
+            frontier = rec_idx if rc else jnp.where(changed, rec_idx, n_local)
+
+        add_back = lambda t: jax.tree.map(lambda a: a[None], t)
+        ovf_g = jax.lax.psum(overflow.astype(jnp.float32), dax)
+        return (add_back(H), add_back(S), add_back(C), add_back(frontier),
+                ovf_g, jnp.stack(comm))
+
+    state_spec_h = tuple(P(dax, None, "model") for _ in range(L + 1))
+    state_spec_s = (P(dax, None),) + tuple(P(dax, None, "model")
+                                           for _ in range(L))
+    batch_spec = DistBatch(
+        feat_idx=P(dax, None), feat_val=P(dax, None, "model"),
+        add_src=P(dax, None), add_dst=P(dax, None), add_w=P(dax, None),
+        del_src=P(dax, None), del_dst=P(dax, None), del_w=P(dax, None))
+    csr_spec = DistCSR(col=P(dax, None), w=P(dax, None),
+                       start=P(dax, None), length=P(dax, None))
+    fn = shard_map_compat(
+        local_fn, mesh=mesh,
+        in_specs=(tp_param_specs(workload), state_spec_h, state_spec_s,
+                  state_spec_s, P(dax, None), csr_spec, csr_spec, batch_spec),
+        out_specs=(state_spec_h, state_spec_s, state_spec_s, P(dax, None),
+                   P(), P()),
+        check_vma=False)
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
 # Distributed layer-wise recompute baseline ("RC", pull-based — paper fig 12)
 # ---------------------------------------------------------------------------
 def make_rc_propagate(mesh, workload: Workload, n_local: int,
@@ -334,40 +597,13 @@ def make_rc_propagate(mesh, workload: Workload, n_local: int,
             # --- pull ALL in-neighbors of affected vertices ----------------
             aff_c = jnp.minimum(rec_idx, n_local - 1)
             degs = jnp.where(rec_idx < n_local, in_csr.length[aff_c], 0)
-            csum = jnp.cumsum(degs)
-            total = csum[-1]
-            overflow |= total > pull_cap
-            e = jnp.arange(pull_cap, dtype=jnp.int32)
-            fid = jnp.minimum(jnp.searchsorted(csum, e, "right").astype(jnp.int32),
-                              r_cap - 1)
-            off = e - (csum[fid] - degs[fid])
-            flat = in_csr.start[aff_c[fid]] + off
-            evalid = e < total
-            flat = jnp.where(evalid, flat, 0)
-            src_g = jnp.where(evalid, in_csr.col[flat], n_pad)  # global srcs
-            ew = in_csr.w[flat] if spec.weighted \
-                else jnp.ones(pull_cap, H[l].dtype)
-
-            # request/response: route src ids to owners, owners reply values
-            req_ids, req_slot, counts2, ovf2 = _pack_by_partition(
-                n_parts, n_local, pull_cap,
-                src_g, jnp.arange(pull_cap, dtype=jnp.float32)[:, None])
-            overflow |= ovf2
-            comm_req = jax.lax.psum(counts2.sum() - counts2[me], dax)
-            r_req, _ = _exchange(req_ids, req_slot, dax)
-            vals_resp = H[l][jnp.minimum(r_req, n_local - 1)] \
-                * (r_req < n_local)[..., None]
-            # respond: send values straight back (reverse exchange); block
-            # layout is preserved, so row p of the reply aligns position-wise
-            # with the requests I originally packed for owner p
-            _, back_vals = _exchange(r_req, vals_resp, dax)
+            got, src_g, fid, evalid, ew, comm_req, p_ovf = \
+                _pull_in_neighbors(n_parts, n_local, n_pad, dax, me, H[l],
+                                   in_csr, aff_c, degs, pull_cap, r_cap)
+            overflow |= p_ovf
+            if not spec.weighted:
+                ew = jnp.ones(pull_cap, H[l].dtype)
             comm_resp = comm_req  # one value per requested id comes back
-            # place returned values into their pull slots (my original buffers)
-            slot = req_slot[..., 0].astype(jnp.int32).reshape(-1)
-            filled = (req_ids < n_local).reshape(-1)
-            got = jnp.zeros((pull_cap,) + H[l].shape[1:], H[l].dtype)
-            got = got.at[jnp.where(filled, slot, pull_cap)].set(
-                back_vals.reshape((-1,) + back_vals.shape[2:]), mode="drop")
             comm.append(comm_ids + comm_req + comm_resp)
 
             # segment-sum pulled values into S rows of affected vertices

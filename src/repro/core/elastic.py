@@ -30,7 +30,9 @@ def elastic_resize(engine: DistEngine, new_mesh, *, seed: int = 0,
     state = InferenceState(
         H=[np.zeros((n, int(h.shape[-1])), np.float32) for h in engine.H],
         S=[np.zeros((n, int(s.shape[-1])), np.float32) for s in engine.S],
-        k=np.zeros(n, np.float32))
+        k=np.zeros(n, np.float32),
+        C=[np.full((n, int(c.shape[-1])), -1, np.int32) for c in engine.C]
+        if engine.monotonic else None)
     engine.gather_state(state)
     return DistEngine(engine.workload, engine.params, engine.host_graph,
                       state, new_mesh, mode=engine.mode,

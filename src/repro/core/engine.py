@@ -8,9 +8,9 @@ next-hop mailboxes.  The recompute engine (``RecomputeEngine``, the paper's
 in-neighbor of each affected vertex at each hop — the k vs 2k' contrast the
 paper quantifies in §4.3.3.
 
-Message algebra (exactness proof sketch, see tests/test_engine_equivalence):
-at hop ``l`` with current adjacency A' (topology updates already applied),
-the mailbox contribution to v is
+Message algebra — invertible family (exactness proof sketch, see
+tests/test_engine_equivalence): at hop ``l`` with current adjacency A'
+(topology updates already applied), the mailbox contribution to v is
 
     sum_{(u,v) in A', u in F_l}  alpha * Delta_l[u]          (persistent scan)
   + sum_{(u,v) added}            alpha * h_old_l[u]          (add correction)
@@ -20,6 +20,16 @@ with ``h_old = H_l[u] - Delta_l[u]``.  Summing cases shows S' = S + mailbox
 equals the from-scratch aggregate over A' of the *new* h_l — exactly, for
 every linear aggregator; ``mean`` stays exact because (S, k) are tracked
 separately and k is updated with the topology.
+
+Monotonic family (max/min): mailboxes carry *candidate extrema* instead of
+deltas, and each message is classified GROW / SHRINK against the tracked
+(extremum, contributor) state — GROW folds the candidate in with one
+elementwise min/max, SHRINK re-aggregates exactly the touched row over its
+current in-neighborhood.  Propagation is *filtered*: only rows whose
+embedding actually changed enter the next frontier, so covered updates stop
+dead instead of expanding the full k-hop neighborhood.  The algebra, the
+invariant that makes classification exact, and the event taxonomy live in
+core/aggregators.py.
 
 This engine is NumPy host-side, mirroring the paper's own implementation
 (§6, "implemented natively in Python ... leverage NumPy").  The TPU-native
@@ -33,6 +43,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .aggregators import np_segment_extremum, np_shrink_mask
 from .graph import DynamicGraph, EdgeUpdate, UpdateBatch, flat_row_indices
 from .state import InferenceState
 from .workloads import Workload
@@ -49,6 +60,8 @@ class BatchStats:
     numeric_ops: int = 0        # aggregation element-ops (paper's k vs 2k')
     wall_seconds: float = 0.0
     final_affected: np.ndarray | None = None
+    shrink_events: int = 0      # monotonic: messages classified SHRINK
+    rows_reaggregated: int = 0  # monotonic: rows re-aggregated over in-nbrs
 
     @property
     def total_affected(self) -> int:
@@ -57,26 +70,19 @@ class BatchStats:
 
 def _np_update(workload: Workload, params_np: list[dict], layer: int,
                h_prev: np.ndarray, x: np.ndarray) -> np.ndarray:
-    """NumPy mirror of workloads._FAMILY_UPDATE (kept in lockstep by tests)."""
-    p = params_np[layer]
-    last = layer == workload.spec.n_layers - 1
-    fam = workload.family
-    if fam == "gc":
-        out = x @ p["w"] + p["b"]
-    elif fam == "sage":
-        out = h_prev @ p["w_self"] + x @ p["w_nbr"] + p["b"]
-    elif fam == "gin":
-        z = (1.0 + p["eps"]) * h_prev + x
-        out = np.maximum(z @ p["w1"] + p["b1"], 0.0) @ p["w2"] + p["b2"]
-    else:
-        raise ValueError(fam)
-    return out if last else np.maximum(out, 0.0)
+    """The workload's UPDATE over NumPy — same family table as the jitted
+    path (workloads.FAMILY_UPDATE bound to xp=np)."""
+    return workload.update_fn(layer, xp=np)(params_np[layer], h_prev, x)
 
 
 def _np_normalize(workload: Workload, S: np.ndarray, k: np.ndarray) -> np.ndarray:
-    if workload.spec.aggregator == "mean":
-        return S / np.maximum(k, 1.0)[:, None]
-    return S
+    return workload.agg.normalize(S, k, xp=np)
+
+
+def _edge_arrays(edges: list[EdgeUpdate]) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    return (np.array([e.src for e in edges], dtype=np.int64),
+            np.array([e.dst for e in edges], dtype=np.int64),
+            np.array([e.weight for e in edges], dtype=_F))
 
 
 class _EngineBase:
@@ -108,6 +114,12 @@ class RippleEngine(_EngineBase):
     """The paper's incremental engine (single machine)."""
 
     def apply_batch(self, batch: UpdateBatch) -> BatchStats:
+        if self.workload.agg.invertible:
+            return self._apply_invertible(batch)
+        return self._apply_monotonic(batch)
+
+    # -- invertible aggregators: delta mailboxes --------------------------
+    def _apply_invertible(self, batch: UpdateBatch) -> BatchStats:
         t0 = time.perf_counter()
         stats = BatchStats()
         g, st, wl = self.graph, self.state, self.workload
@@ -115,12 +127,8 @@ class RippleEngine(_EngineBase):
 
         adds, dels = g.apply_topology(batch.edges)
         st.k = g.in_degree  # degree vector is shared with the graph store
-        add_src = np.array([e.src for e in adds], dtype=np.int64)
-        add_dst = np.array([e.dst for e in adds], dtype=np.int64)
-        add_w = np.array([e.weight for e in adds], dtype=_F)
-        del_src = np.array([e.src for e in dels], dtype=np.int64)
-        del_dst = np.array([e.dst for e in dels], dtype=np.int64)
-        del_w = np.array([e.weight for e in dels], dtype=_F)
+        add_src, add_dst, add_w = _edge_arrays(adds)
+        del_src, del_dst, del_w = _edge_arrays(dels)
         if not wl.spec.weighted:
             add_w = np.ones_like(add_w)
             del_w = np.ones_like(del_w)
@@ -204,20 +212,123 @@ class RippleEngine(_EngineBase):
         stats.wall_seconds = time.perf_counter() - t0
         return stats
 
+    # -- monotonic aggregators: GROW/SHRINK filtered propagation ----------
+    def _apply_monotonic(self, batch: UpdateBatch) -> BatchStats:
+        """Exact incremental max/min (see module + aggregators docstrings).
+
+        Per hop: the frontier's out-edges plus the batch's edge updates form
+        one message stream (dst, src, is_del); each message is classified
+        against the tracked (S, C) rows — SHRINK rows re-aggregate over
+        their current in-neighborhood, then all candidate values fold in
+        with one idempotent elementwise min/max (re-aggregated rows absorb
+        them for free).  Only rows whose embedding changed propagate.
+        """
+        t0 = time.perf_counter()
+        stats = BatchStats()
+        g, st, wl = self.graph, self.state, self.workload
+        agg = wl.agg
+        L = wl.spec.n_layers
+
+        adds, dels = g.apply_topology(batch.edges)
+        st.k = g.in_degree
+        add_src, add_dst, _ = _edge_arrays(adds)
+        del_src, del_dst, _ = _edge_arrays(dels)
+
+        frontier, delta0 = self._apply_features(batch)
+        if frontier.size:  # hop-0 filtering: no-op feature writes stop here
+            frontier = frontier[np.any(delta0 != 0, axis=1)]
+        stats.affected_per_hop.append(len(frontier))
+
+        for l in range(L):
+            H_l, S_next, C_next = st.H[l], st.S[l + 1], st.C[l + 1]
+
+            # ---- unified message stream (dst, src, is_del) ---------------
+            if frontier.size:
+                degs = g.out.length[frontier]
+                flat = flat_row_indices(g.out.start[frontier], degs)
+                m_dst = g.out.col[flat]
+                m_src = np.repeat(frontier, degs)
+            else:
+                m_dst = m_src = np.empty(0, dtype=np.int64)
+            msg_dst = np.concatenate([m_dst, add_dst, del_dst])
+            msg_src = np.concatenate([m_src, add_src, del_src])
+            is_del = np.zeros(msg_dst.size, dtype=bool)
+            is_del[m_dst.size + add_dst.size:] = True
+            stats.messages_per_hop.append(int(msg_dst.size))
+
+            affected = np.unique(msg_dst)
+            if wl.spec.self_dependent and frontier.size:
+                affected = np.union1d(affected, frontier)
+            stats.affected_per_hop.append(int(affected.size))
+            if affected.size == 0:
+                frontier = affected
+                continue
+
+            self._pos[affected] = np.arange(affected.size)
+            slot = self._pos[msg_dst]
+            S_aff = S_next[affected].copy()
+            C_aff = C_next[affected].copy()
+
+            # ---- classify: SHRINK probes re-aggregate their row ----------
+            shrink = np_shrink_mask(agg, C_next[msg_dst], S_next[msg_dst],
+                                    msg_src, H_l[msg_src], is_del)
+            row_shrink = np.zeros(affected.size, dtype=bool)
+            row_shrink[slot[shrink]] = True
+            stats.shrink_events += int(shrink.sum())
+            sh_rows = affected[row_shrink]
+            if sh_rows.size:
+                in_degs = g.inn.length[sh_rows]
+                flat_in = flat_row_indices(g.inn.start[sh_rows], in_degs)
+                nbr = g.inn.col[flat_in]
+                seg = np.repeat(np.arange(sh_rows.size), in_degs)
+                S_re, C_re = np_segment_extremum(agg, H_l[nbr], seg,
+                                                 sh_rows.size, nbr)
+                S_aff[row_shrink] = S_re
+                C_aff[row_shrink] = C_re
+                stats.numeric_ops += int(in_degs.sum())
+                stats.rows_reaggregated += int(sh_rows.size)
+
+            # ---- GROW: fold candidates in (idempotent on shrink rows) ----
+            cand = ~is_del
+            c_slot, c_src = slot[cand], msg_src[cand]
+            c_val = H_l[c_src]
+            agg.ufunc.at(S_aff, c_slot, c_val)
+            stats.numeric_ops += int(c_src.size)
+            if c_src.size:
+                jj, dd = np.nonzero(c_val == S_aff[c_slot])
+                C_aff[c_slot[jj], dd] = c_src[jj]
+            self._pos[affected] = -1
+
+            # ---- apply + filtered propagation ----------------------------
+            x = _np_normalize(wl, S_aff, st.k[affected])
+            h_new = _np_update(wl, self.params, l, H_l[affected], x)
+            changed = np.any(h_new != st.H[l + 1][affected], axis=1)
+            S_next[affected] = S_aff
+            C_next[affected] = C_aff
+            st.H[l + 1][affected] = h_new
+            frontier = affected[changed]
+
+        stats.final_affected = frontier
+        stats.wall_seconds = time.perf_counter() - t0
+        return stats
+
 
 class RecomputeEngine(_EngineBase):
     """Layer-wise recompute scoped to the affected neighborhood ("RC", §4.2).
 
     Identical frontier expansion to RIPPLE, but every affected vertex
     re-aggregates ALL of its in-neighbors at each hop (the paper's k-ops
-    baseline).  The mailbox machinery is unnecessary — only the affected
-    sets propagate.
+    baseline) — for monotonic aggregators too, which makes it the unfiltered
+    re-aggregate-everything baseline that bench_single contrasts with
+    RIPPLE's filtered propagation.  The mailbox machinery is unnecessary —
+    only the affected sets propagate.
     """
 
     def apply_batch(self, batch: UpdateBatch) -> BatchStats:
         t0 = time.perf_counter()
         stats = BatchStats()
         g, st, wl = self.graph, self.state, self.workload
+        agg = wl.agg
         L = wl.spec.n_layers
 
         adds, dels = g.apply_topology(batch.edges)
@@ -249,10 +360,16 @@ class RecomputeEngine(_EngineBase):
             total = int(in_degs.sum())
             flat = flat_row_indices(g.inn.start[affected], in_degs)
             nbr = g.inn.col[flat]
-            w = g.inn.w[flat] if wl.spec.weighted else np.ones(total, dtype=_F)
             seg = np.repeat(np.arange(affected.size), in_degs)
-            S_rows = np.zeros((affected.size, st.H[l].shape[1]), dtype=_F)
-            np.add.at(S_rows, seg, st.H[l][nbr] * w[:, None])
+            if agg.invertible:
+                w = g.inn.w[flat] if wl.spec.weighted else np.ones(total, dtype=_F)
+                S_rows = np.zeros((affected.size, st.H[l].shape[1]), dtype=_F)
+                np.add.at(S_rows, seg, st.H[l][nbr] * w[:, None])
+            else:
+                S_rows, C_rows = np_segment_extremum(agg, st.H[l][nbr], seg,
+                                                     affected.size, nbr)
+                st.C[l + 1][affected] = C_rows
+                stats.rows_reaggregated += int(affected.size)
             stats.numeric_ops += int(total)
             stats.messages_per_hop.append(int(total))
             st.S[l + 1][affected] = S_rows

@@ -17,12 +17,18 @@ import numpy as np
 from .workloads import Workload
 
 
-@partial(jax.jit, static_argnames=("n",))
-def aggregate_all(h: jax.Array, src: jax.Array, dst: jax.Array, w: jax.Array,
-                  n: int) -> jax.Array:
-    """S[v] = sum_{(u,v) in E} w_uv * h[u]   — one dense segment-sum."""
-    msgs = h[src] * w[:, None]
-    return jax.ops.segment_sum(msgs, dst, num_segments=n)
+@partial(jax.jit, static_argnames=("workload", "n"))
+def aggregate_all(workload: Workload, h: jax.Array, src: jax.Array,
+                  dst: jax.Array, w: jax.Array, n: int) -> jax.Array:
+    """One dense segment reduction over all edges, per the workload's
+    aggregator: segment-sum of w_uv * h[u] for the invertible family,
+    segment-max/min of h[u] for the monotonic family (empty rows hold the
+    aggregator identity, +/-inf)."""
+    agg = workload.agg
+    if agg.invertible:
+        msgs = h[src] * w[:, None]
+        return jax.ops.segment_sum(msgs, dst, num_segments=n)
+    return agg.segment_jnp(h[src], dst, n)
 
 
 def full_inference(workload: Workload, params: list[dict], x: jax.Array,
@@ -45,7 +51,7 @@ def full_inference(workload: Workload, params: list[dict], x: jax.Array,
     H = [x]
     S: list[jax.Array] = [jnp.zeros((0,), dtype=x.dtype)]
     for l in range(workload.spec.n_layers):
-        s_l = aggregate_all(H[l], src, dst, w, n)
+        s_l = aggregate_all(workload, H[l], src, dst, w, n)
         x_l = workload.normalize(s_l, k)
         h_l = workload.update_fn(l)(params[l], H[l], x_l)
         S.append(s_l)

@@ -4,15 +4,21 @@ RIPPLE's assumption (§4.1): initial embeddings for all layers are
 bootstrapped with the trained model before updates arrive.  We additionally
 keep the *unnormalized* aggregate S^l and in-degree k so that ``mean``
 aggregation stays exact when topology updates change degrees (DESIGN.md §2).
+
+Monotonic workloads (max/min) carry one more tracked array family: the
+contributor refs ``C[l][v, d]`` — which in-neighbor's layer-(l-1) embedding
+attains the stored extremum ``S[l][v, d]`` (see core/aggregators.py for the
+algebra).  ``C`` is ``None`` for invertible workloads; every engine and the
+checkpoint layer round-trip it with the rest of the state.
 """
 from __future__ import annotations
 
-import copy
 from dataclasses import dataclass
 
 import jax
 import numpy as np
 
+from .aggregators import MonotonicAgg, compute_contributors
 from .full import full_inference
 from .graph import DynamicGraph
 from .workloads import Workload
@@ -25,22 +31,28 @@ class InferenceState:
     H: list[np.ndarray]  # H[0..L]: embeddings per layer; H[0] = features
     S: list[np.ndarray]  # S[1..L]: unnormalized aggregates (S[0] unused)
     k: np.ndarray        # in-degree (float32), shared across layers
+    C: list[np.ndarray] | None = None  # C[1..L]: monotonic contributor refs
+    #                                    (int32, -1 = empty; None if invertible)
 
     @classmethod
     def bootstrap(cls, workload: Workload, params: list[dict],
                   x: np.ndarray, graph: DynamicGraph) -> "InferenceState":
-        src, dst, w = graph.coo()
-        H, S = full_inference(workload, params, jax.numpy.asarray(x),
-                              src, dst, w, graph.in_degree)
+        H_j, S_j = full_inference(workload, params, jax.numpy.asarray(x),
+                                  *graph.coo(), graph.in_degree)
         # np.array(copy=True): jax arrays convert to read-only views otherwise
-        return cls(H=[np.array(h, dtype=np.float32) for h in H],
-                   S=[np.array(s, dtype=np.float32) for s in S],
-                   k=graph.in_degree.copy())
+        H = [np.array(h, dtype=np.float32) for h in H_j]
+        S = [np.array(s, dtype=np.float32) for s in S_j]
+        agg = workload.agg
+        C = compute_contributors(agg, H, S, graph) \
+            if isinstance(agg, MonotonicAgg) else None
+        return cls(H=H, S=S, k=graph.in_degree.copy(), C=C)
 
     def clone(self) -> "InferenceState":
         return InferenceState(H=[h.copy() for h in self.H],
                               S=[s.copy() for s in self.S],
-                              k=self.k.copy())
+                              k=self.k.copy(),
+                              C=None if self.C is None
+                              else [c.copy() for c in self.C])
 
     @property
     def n(self) -> int:
@@ -51,7 +63,8 @@ class InferenceState:
 
     def nbytes(self) -> int:
         return (sum(h.nbytes for h in self.H) + sum(s.nbytes for s in self.S)
-                + self.k.nbytes)
+                + self.k.nbytes
+                + (sum(c.nbytes for c in self.C) if self.C else 0))
 
 
 def params_to_numpy(params: list[dict]) -> list[dict]:

@@ -29,19 +29,17 @@ class VertexWiseEngine:
         if layer == 0:
             return self.x[v]
         nbrs, w = self.g.in_nbrs(v)
-        d_prev = self.x.shape[1] if layer == 1 else \
-            self.params[layer - 2]["w"].shape[1] if "w" in self.params[layer - 2] \
-            else self._h(v, layer - 1).shape[0]
+        agg = self.wl.agg
         if nbrs.size:
             stack = np.stack([self._h(int(u), layer - 1) for u in nbrs])
             if self.wl.spec.weighted:
                 stack = stack * w[:, None]
-            S = stack.sum(axis=0)
+            S = stack.sum(axis=0) if agg.invertible \
+                else agg.ufunc.reduce(stack, axis=0)
             self.ops += nbrs.size
         else:
-            S = np.zeros(self._h(v, layer - 1).shape if layer > 1 else d_prev,
-                         dtype=np.float32)
-            S = np.zeros_like(self._h(v, layer - 1))
+            S = np.full_like(self._h(v, layer - 1),
+                             0.0 if agg.invertible else agg.identity)
         h_prev = self._h(v, layer - 1)
         xagg = _np_normalize(self.wl, S[None, :],
                              np.array([self.g.in_degree[v]]))[0]

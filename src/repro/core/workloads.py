@@ -1,19 +1,26 @@
-"""The paper's five GNN inference workloads (§7.1.1).
+"""The GNN inference workloads: the paper's five (§7.1.1) plus monotonic.
 
-GC-S  GraphConv + sum            h^l = relu(W_l x^l + b_l)
-GS-S  GraphSAGE + sum            h^l = relu(W_self h^{l-1} + W_nbr x^l + b_l)
-GC-M  GraphConv + mean           x^l = S^l / k
-GI-S  GINConv + sum              h^l = MLP_l((1+eps) h^{l-1} + x^l)
-GC-W  GraphConv + weighted sum   x^l = sum_j alpha_ij h_j
+GC-S   GraphConv + sum            h^l = relu(W_l x^l + b_l)
+GS-S   GraphSAGE + sum            h^l = relu(W_self h^{l-1} + W_nbr x^l + b_l)
+GC-M   GraphConv + mean           x^l = S^l / k
+GI-S   GINConv + sum              h^l = MLP_l((1+eps) h^{l-1} + x^l)
+GC-W   GraphConv + weighted sum   x^l = sum_j alpha_ij h_j
+GS-MAX GraphSAGE + max            x^l = max_j h_j   (elementwise)
+GC-MIN GraphConv + min            x^l = min_j h_j   (elementwise)
 
 where S^l is the *unnormalized* aggregate of h^{l-1} over in-neighbors and
 x^l its normalized form.  Storing (S, k) instead of x keeps ``mean`` exact
-under in-degree changes from streaming topology updates (DESIGN.md §2).
+under in-degree changes from streaming topology updates (DESIGN.md §2);
+for max/min, S holds the tracked extremum (identity in empty rows) and the
+engines additionally track contributor refs (see core/aggregators.py).
 
 Each workload is a pure-function spec: parameter pytree + an ``update_fn``
-mapping (params_l, h_prev, S, k) -> h_l.  All engines (full, RC, RIPPLE,
-distributed) share these definitions so correctness tests compare engines,
-never re-implementations.
+mapping (params_l, h_prev, x) -> h_l.  The per-family UPDATE bodies are
+written once against an array-module parameter ``xp`` (NumPy or jax.numpy),
+so the host engines and the jitted engines share ONE family table instead
+of hand-mirrored implementations.  All engines (full, RC, RIPPLE, device,
+distributed) consume these definitions so correctness tests compare
+engines, never re-implementations.
 """
 from __future__ import annotations
 
@@ -25,7 +32,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-Aggregator = str  # "sum" | "mean" | "wsum"
+from .aggregators import Aggregator, get_aggregator
+
+
+def _gc_update(xp, p, h_prev, x, *, last: bool):
+    out = x @ p["w"] + p["b"]
+    return out if last else xp.maximum(out, 0.0)
+
+
+def _sage_update(xp, p, h_prev, x, *, last: bool):
+    out = h_prev @ p["w_self"] + x @ p["w_nbr"] + p["b"]
+    return out if last else xp.maximum(out, 0.0)
+
+
+def _gin_update(xp, p, h_prev, x, *, last: bool):
+    z = (1.0 + p["eps"]) * h_prev + x
+    out = xp.maximum(z @ p["w1"] + p["b1"], 0.0) @ p["w2"] + p["b2"]
+    return out if last else xp.maximum(out, 0.0)
+
+
+# the ONE family table: every engine (NumPy host, jitted device, shard_map
+# distributed epilogues aside) derives its UPDATE from these entries
+FAMILY_UPDATE = {"gc": _gc_update, "sage": _sage_update, "gin": _gin_update}
+_FAMILY_SELF_DEP = {"gc": False, "sage": True, "gin": True}
 
 
 @dataclass(frozen=True)
@@ -33,44 +62,29 @@ class WorkloadSpec:
     """A GNN inference workload: model family x aggregation function."""
 
     name: str
-    aggregator: Aggregator
+    aggregator: str  # "sum" | "mean" | "wsum" | "max" | "min"
     self_dependent: bool  # does h^l read h^{l-1}_self directly?
     n_layers: int
     dims: tuple[int, ...]  # (d0, d1, ..., dL)
 
     @property
     def weighted(self) -> bool:
-        return self.aggregator == "wsum"
+        return get_aggregator(self.aggregator).weighted
 
-
-def _relu(x):
-    return jax.nn.relu(x)
-
-
-def _gc_update(p, h_prev, x, *, last: bool):
-    out = x @ p["w"] + p["b"]
-    return out if last else _relu(out)
-
-
-def _sage_update(p, h_prev, x, *, last: bool):
-    out = h_prev @ p["w_self"] + x @ p["w_nbr"] + p["b"]
-    return out if last else _relu(out)
-
-
-def _gin_update(p, h_prev, x, *, last: bool):
-    z = (1.0 + p["eps"]) * h_prev + x
-    out = _relu(z @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
-    return out if last else _relu(out)
-
-
-_FAMILY_UPDATE = {"gc": _gc_update, "sage": _sage_update, "gin": _gin_update}
-_FAMILY_SELF_DEP = {"gc": False, "sage": True, "gin": True}
+    @property
+    def monotonic(self) -> bool:
+        return not get_aggregator(self.aggregator).invertible
 
 
 @dataclass(frozen=True)
 class Workload:
     spec: WorkloadSpec
     family: str
+
+    @property
+    def agg(self) -> Aggregator:
+        """The aggregation algebra this workload runs on."""
+        return get_aggregator(self.spec.aggregator)
 
     def init_params(self, key: jax.Array) -> list[dict]:
         dims = self.spec.dims
@@ -98,28 +112,34 @@ class Workload:
             params.append(p)
         return params
 
-    def update_fn(self, layer: int) -> Callable:
+    def update_fn(self, layer: int, xp=jnp) -> Callable:
+        """The layer's UPDATE bound to an array module (jnp by default;
+        host engines pass ``xp=np`` and get the same body over NumPy)."""
         last = layer == self.spec.n_layers - 1
-        return partial(_FAMILY_UPDATE[self.family], last=last)
+        return partial(FAMILY_UPDATE[self.family], xp, last=last)
 
     def normalize(self, S: jax.Array, k: jax.Array) -> jax.Array:
         """Aggregate normalization x = norm(S, k)."""
-        if self.spec.aggregator == "mean":
-            return S / jnp.maximum(k, 1.0)[:, None]
-        return S
+        return self.agg.normalize(S, k, xp=jnp)
+
+
+_WORKLOAD_TABLE = {
+    "gc-s": ("gc", "sum"),
+    "gs-s": ("sage", "sum"),
+    "gc-m": ("gc", "mean"),
+    "gi-s": ("gin", "sum"),
+    "gc-w": ("gc", "wsum"),
+    "gs-max": ("sage", "max"),
+    "gc-min": ("gc", "min"),
+}
 
 
 def make_workload(name: str, n_layers: int = 2, d_in: int = 32,
                   d_hidden: int = 32, n_classes: int = 8) -> Workload:
-    """Factory for the paper's 5 workloads: gc-s, gs-s, gc-m, gi-s, gc-w."""
+    """Factory for the registered workloads: the paper's five (gc-s, gs-s,
+    gc-m, gi-s, gc-w) plus the monotonic pair (gs-max, gc-min)."""
     name = name.lower()
-    family, agg = {
-        "gc-s": ("gc", "sum"),
-        "gs-s": ("sage", "sum"),
-        "gc-m": ("gc", "mean"),
-        "gi-s": ("gin", "sum"),
-        "gc-w": ("gc", "wsum"),
-    }[name]
+    family, agg = _WORKLOAD_TABLE[name]
     dims = (d_in,) + (d_hidden,) * (n_layers - 1) + (n_classes,)
     spec = WorkloadSpec(name=name, aggregator=agg,
                         self_dependent=_FAMILY_SELF_DEP[family],
@@ -127,4 +147,6 @@ def make_workload(name: str, n_layers: int = 2, d_in: int = 32,
     return Workload(spec=spec, family=family)
 
 
-WORKLOAD_NAMES = ("gc-s", "gs-s", "gc-m", "gi-s", "gc-w")
+WORKLOAD_NAMES = tuple(_WORKLOAD_TABLE)
+MONOTONIC_WORKLOAD_NAMES = tuple(n for n, (_, a) in _WORKLOAD_TABLE.items()
+                                 if not get_aggregator(a).invertible)

@@ -3,7 +3,11 @@
 The paper removes a random 10% of edges from each graph to form the initial
 snapshot and streams them back as additions; deletions pick random snapshot
 edges; feature updates pick random vertices; all three kinds are interleaved
-in equal proportion in random order.
+in equal proportion in random order.  Beyond the paper's protocol,
+``make_stream`` takes an update-``mix`` ratio (e.g. deletion-heavy streams
+that stress the monotonic aggregators' SHRINK path) and a power-law
+hot-vertex ``skew`` that concentrates deletions/feature updates on
+high-rank vertices.
 """
 from __future__ import annotations
 
@@ -48,28 +52,65 @@ def snapshot_split(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
 
 def make_stream(graph: DynamicGraph, holdout: tuple[np.ndarray, np.ndarray, np.ndarray],
                 n_updates: int, d_feat: int, seed: int = 0,
-                feature_scale: float = 1.0) -> UpdateStream:
-    """Equal-thirds stream of edge adds / edge deletes / feature updates."""
+                feature_scale: float = 1.0,
+                mix: tuple[float, float, float] = (1.0, 1.0, 1.0),
+                skew: float = 0.0) -> UpdateStream:
+    """Interleaved stream of edge adds / edge deletes / feature updates.
+
+    ``mix`` gives the relative weights of (additions, deletions, feature
+    updates) — the paper's protocol is the equal-proportion default; e.g.
+    ``mix=(1, 4, 1)`` produces the deletion-heavy streams that exercise the
+    monotonic aggregators' SHRINK path.  ``skew > 0`` concentrates deletions
+    and feature updates on hot vertices with probability ~ rank^-skew
+    (deletions by their destination's hotness), mimicking the head-heavy
+    update locality of social graphs instead of the paper's uniform pick.
+
+    Feature updates absorb any shortfall when the holdout/snapshot supply
+    caps the edge kinds (the paper-protocol behavior) — unless the feature
+    weight is exactly 0, in which case the stream honors the zero and may
+    hold fewer than ``n_updates`` updates (there is nothing left to
+    stream); callers should trust ``len(stream)``, not ``n_updates``.
+    """
     rng = np.random.default_rng(seed)
     h_src, h_dst, h_w = holdout
-    per_kind = n_updates // 3
+    w = np.asarray(mix, dtype=np.float64)
+    if w.min() < 0 or w.sum() <= 0:
+        raise ValueError(f"mix must be non-negative with a positive sum: {mix}")
+    w = w / w.sum()
     updates: list = []
 
+    # hot-vertex distribution (vertex id = rank, like powerlaw_graph)
+    p_hot = None
+    if skew > 0:
+        p_hot = np.arange(1, graph.n + 1, dtype=np.float64) ** (-skew)
+        p_hot /= p_hot.sum()
+
+    # targets honor the ratios exactly; rounding overshoot trims deletions
+    n_add_t = int(round(n_updates * w[0]))
+    n_del_t = max(min(int(round(n_updates * w[1])), n_updates - n_add_t), 0)
+
     # additions: stream back held-out edges
-    n_add = min(per_kind, h_src.shape[0])
+    n_add = min(n_add_t, h_src.shape[0])
     for i in range(n_add):
         updates.append(EdgeUpdate(int(h_src[i]), int(h_dst[i]), True, float(h_w[i])))
 
-    # deletions: random existing snapshot edges
+    # deletions: existing snapshot edges, optionally biased to hot dsts
     s_src, s_dst, _ = graph.coo()
-    n_del = min(per_kind, s_src.shape[0])
-    idx = rng.choice(s_src.shape[0], size=n_del, replace=False)
-    for i in idx:
-        updates.append(EdgeUpdate(int(s_src[i]), int(s_dst[i]), False))
+    n_del = min(n_del_t, s_src.shape[0])
+    if n_del:
+        p_edge = None
+        if p_hot is not None:
+            p_edge = p_hot[s_dst]
+            p_edge = p_edge / p_edge.sum()
+        idx = rng.choice(s_src.shape[0], size=n_del, replace=False, p=p_edge)
+        for i in idx:
+            updates.append(EdgeUpdate(int(s_src[i]), int(s_dst[i]), False))
 
-    # vertex feature updates
-    n_feat = n_updates - n_add - n_del
-    vs = rng.integers(0, graph.n, size=n_feat)
+    # vertex feature updates soak up any supply-capped shortfall from the
+    # edge kinds (the paper-protocol behavior) — but never when the caller
+    # explicitly zeroed the feature weight
+    n_feat = max(n_updates - n_add - n_del, 0) if w[2] > 0 else 0
+    vs = rng.choice(graph.n, size=n_feat, p=p_hot)
     for v in vs:
         updates.append(FeatureUpdate(int(v),
                                      rng.normal(0, feature_scale, size=d_feat).astype(np.float32)))

@@ -1,0 +1,1 @@
+from .ops import extremum_apply  # noqa: F401

@@ -1,0 +1,12 @@
+"""Oracle for the fused monotonic apply: S' = extremum(S, M); h = act(x@W+b)."""
+import jax
+import jax.numpy as jnp
+
+
+def extremum_apply_ref(S, mailbox, W, b, *, maximize: bool, relu: bool):
+    S_new = jnp.maximum(S, mailbox) if maximize else jnp.minimum(S, mailbox)
+    x = jnp.where(jnp.isfinite(S_new), S_new, 0.0)
+    h = x @ W + b
+    if relu:
+        h = jax.nn.relu(h)
+    return S_new, h

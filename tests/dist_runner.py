@@ -5,8 +5,11 @@ Everything goes through ``repro.api`` — the distributed path is exercised
 exactly the way a serving deployment reaches it: ``InferenceSession`` with
 ``engine="dist"`` / ``"dist-rc"`` and a mesh in ``engine_options``.  Covers:
 
-  * oracle exactness of the dist session for all five workload families,
-    both modes, including the multi-pod ("pod", "data") partition geometry;
+  * oracle exactness of the dist session for all workload families — the
+    paper's five plus the monotonic pair (gs-max/gc-min, whose mailboxes
+    ship candidate extrema and whose SHRINK rows issue re-aggregation
+    pulls) — in both modes, including the multi-pod ("pod", "data")
+    partition geometry;
   * ``swap_engine`` ripple -> dist -> device round-trip equivalence;
   * sharded checkpoint -> restore onto a *different* mesh geometry.
 """
@@ -64,7 +67,9 @@ def run(mode: str, name: str) -> None:
         rep = s.ingest(updates[step * 5:(step + 1) * 5])
         comm = rep.results[-1].messages_per_hop
         assert_exact(s, f"{mode}/{name} step {step}")
-    assert comm is not None and len(comm) == 2
+    # monotonic comm interleaves [halo, pull] per hop -> 2 slots per layer
+    n_slots = 4 if s.workload.spec.monotonic else 2
+    assert comm is not None and len(comm) == n_slots
     print(f"OK {mode} {name} comm={comm}")
 
 
@@ -158,7 +163,8 @@ def run_elastic_resize() -> None:
 if __name__ == "__main__":
     assert {"dist", "dist-rc"} <= set(engine_names())
     for mode in ("ripple", "rc"):
-        for name in ("gc-s", "gs-s", "gc-m", "gi-s", "gc-w"):
+        for name in ("gc-s", "gs-s", "gc-m", "gi-s", "gc-w",
+                     "gs-max", "gc-min"):
             run(mode, name)
     run_multipod()
     run_swap_roundtrip()

@@ -1,0 +1,312 @@
+"""The aggregator algebra subsystem: every aggregator x every engine stays
+exact against the full-recompute oracle under randomized interleaved
+add/delete/feature streams — including the adversarial delete-the-argmax
+case that forces the monotonic SHRINK fallback — and the tracked
+(extremum, contributor) state survives engine hot-swap and checkpoints.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import InferenceSession, SessionConfig
+from repro.core import (MONOTONIC_WORKLOAD_NAMES, full_inference,
+                        get_aggregator, make_workload)
+from repro.core.aggregators import MAX, MIN, np_segment_extremum
+from repro.core.graph import EdgeUpdate, FeatureUpdate, UpdateBatch
+
+ATOL = 2e-3
+RTOL = 2e-3
+
+# one workload per aggregator: sum / mean / wsum / max / min
+AGG_WORKLOADS = ("gc-s", "gc-m", "gc-w", "gs-max", "gc-min")
+
+
+def _build(name, engine, n=40, m=170, seed=0, **over):
+    cfg = dict(workload=name, engine=engine, graph="er", n=n, m=m,
+               d_in=8, d_hidden=12, n_classes=5, seed=seed)
+    cfg.update(over)
+    return InferenceSession.build(SessionConfig(**cfg))
+
+
+def _oracle_H(session):
+    st = session.sync()
+    H, _ = full_inference(session.workload, session.params,
+                          jax.numpy.asarray(st.H[0]), *session.graph.coo(),
+                          session.graph.in_degree)
+    return [np.asarray(h) for h in H]
+
+
+def _assert_exact(session, label=""):
+    H_ref = _oracle_H(session)
+    for l, (h, href) in enumerate(zip(session.state.H, H_ref)):
+        np.testing.assert_allclose(h, href, atol=ATOL, rtol=RTOL,
+                                   err_msg=f"{label} layer {l}")
+
+
+def _random_batch(rng, session, k=5):
+    g = session.graph
+    batch = UpdateBatch()
+    for _ in range(k):
+        kind = rng.integers(0, 3)
+        if kind == 0:
+            u, v = rng.integers(0, g.n, size=2)
+            if u != v:
+                batch.edges.append(EdgeUpdate(int(u), int(v), True,
+                                              float(rng.uniform(0.1, 1.0))))
+        elif kind == 1:
+            src, dst, _ = g.coo()
+            if src.size:
+                i = rng.integers(0, src.size)
+                batch.edges.append(EdgeUpdate(int(src[i]), int(dst[i]), False))
+        else:
+            batch.features.append(FeatureUpdate(
+                int(rng.integers(0, g.n)),
+                rng.normal(size=8).astype(np.float32)))
+    return batch
+
+
+def _assert_contributor_invariant(session):
+    """S[l][v,d] == H[l-1][C[l][v,d], d] and C entries are in-neighbors."""
+    st = session.sync()
+    for l in range(1, len(st.S)):
+        C, S, H_prev = st.C[l], st.S[l], st.H[l - 1]
+        rows, dims = np.nonzero(C >= 0)
+        np.testing.assert_array_equal(H_prev[C[rows, dims], dims],
+                                      S[rows, dims],
+                                      err_msg=f"layer {l} witness broken")
+        for v in np.unique(rows)[:8]:
+            nbrs = set(session.graph.in_nbrs(int(v))[0].tolist())
+            assert set(C[v][C[v] >= 0].tolist()) <= nbrs, \
+                f"layer {l} contributor not an in-neighbor of {v}"
+
+
+# ---------------------------------------------------------------------------
+# randomized streams: every aggregator x every engine vs the oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", AGG_WORKLOADS)
+@pytest.mark.parametrize("engine", ["ripple", "rc", "device", "full"])
+def test_random_stream_matches_oracle(name, engine):
+    s = _build(name, engine)
+    rng = np.random.default_rng(11)
+    for step in range(5):
+        s.ingest(_random_batch(rng, s))
+        _assert_exact(s, f"{name}/{engine} step {step}")
+    if s.state.C is not None and engine in ("ripple", "rc", "device"):
+        _assert_contributor_invariant(s)
+
+
+@pytest.mark.parametrize("name", MONOTONIC_WORKLOAD_NAMES)
+def test_vertexwise_query_monotonic(name):
+    s = _build(name, "vertexwise")
+    s.ingest(s.make_stream(12, seed=1), batch_size=4)
+    H_ref = _oracle_H(s)
+    targets = np.arange(10)
+    np.testing.assert_allclose(s.query(targets), H_ref[-1][targets],
+                               atol=ATOL, rtol=RTOL)
+
+
+@pytest.mark.parametrize("name", MONOTONIC_WORKLOAD_NAMES)
+@pytest.mark.parametrize("engine", ["ripple", "device"])
+def test_delete_the_argmax(name, engine):
+    """Adversarial SHRINK: delete exactly the tracked contributor's edge."""
+    s = _build(name, engine)
+    rng = np.random.default_rng(3)
+    shrinks = 0
+    for _ in range(6):
+        st = s.sync()
+        C1 = st.C[1]
+        rows = np.nonzero((C1 >= 0).any(axis=1))[0]
+        v = int(rows[rng.integers(0, rows.size)])
+        dims = np.nonzero(C1[v] >= 0)[0]
+        u = int(C1[v][dims[rng.integers(0, dims.size)]])
+        assert s.graph.has_edge(u, v)
+        res = s.ingest(UpdateBatch(edges=[EdgeUpdate(u, v, False)]))
+        shrinks += res.results[0].shrink_events if res.results else 0
+        _assert_exact(s, f"{name}/{engine} delete argmax ({u}->{v})")
+    if engine == "ripple":  # host engine reports SHRINK classification stats
+        assert shrinks > 0
+
+
+def test_delete_last_in_edge_empties_row():
+    """Removing a vertex's only in-edge must fall back to the identity
+    aggregate (reads as 0 through normalize) and clear the contributor."""
+    s = _build("gs-max", "ripple")
+    g = s.graph
+    deg = g.in_degree.astype(np.int64)
+    ones = np.nonzero(deg == 1)[0]
+    if ones.size == 0:  # make one: fresh vertex with a single in-edge
+        v = int(np.argmin(deg))
+        u = (v + 1) % g.n
+        if not g.has_edge(u, v):
+            s.ingest(UpdateBatch(edges=[EdgeUpdate(u, v, True)]))
+        for w_ in list(g.in_nbrs(v)[0]):
+            if int(w_) != u:
+                s.ingest(UpdateBatch(edges=[EdgeUpdate(int(w_), v, False)]))
+    else:
+        v = int(ones[0])
+        u = int(g.in_nbrs(v)[0][0])
+    s.ingest(UpdateBatch(edges=[EdgeUpdate(int(u), int(v), False)]))
+    st = s.sync()
+    assert st.k[v] == 0
+    assert np.all(st.C[1][v] == -1)
+    assert not np.isfinite(st.S[1][v]).any()
+    _assert_exact(s, "empty-row fallback")
+
+
+# ---------------------------------------------------------------------------
+# filtered propagation beats the RC baseline on shrink-heavy streams
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", MONOTONIC_WORKLOAD_NAMES)
+def test_filtered_propagation_touches_fewer_rows(name):
+    rp = _build(name, "ripple", n=300, m=2400)
+    rc = _build(name, "rc", n=300, m=2400)
+    stream = list(rp.make_stream(240, seed=2, mix=(1, 3, 1), skew=0.8))
+    rep_rp = rp.ingest(stream, batch_size=20)
+    rep_rc = rc.ingest(list(rc.make_stream(240, seed=2, mix=(1, 3, 1),
+                                           skew=0.8)), batch_size=20)
+    _assert_exact(rp, "filtered rp")
+    rows_rp = sum(r.rows_reaggregated for r in rep_rp.results)
+    rows_rc = sum(r.rows_reaggregated for r in rep_rc.results)
+    assert sum(r.shrink_events for r in rep_rp.results) > 0
+    # RIPPLE re-aggregates only covered-removal rows; RC re-aggregates every
+    # affected row — the whole point of the event classification
+    assert rows_rp < rows_rc
+    aff_rp = sum(r.total_affected for r in rep_rp.results)
+    aff_rc = sum(r.total_affected for r in rep_rc.results)
+    assert aff_rp <= aff_rc
+
+
+# ---------------------------------------------------------------------------
+# tracked state round-trips: hot-swap + checkpoint/restore
+# ---------------------------------------------------------------------------
+def test_swap_engine_roundtrips_tracked_state():
+    a = _build("gs-max", "ripple", n=60, m=260)
+    b = _build("gs-max", "ripple", n=60, m=260)
+    ua = list(a.make_stream(24, seed=1))
+    ub = list(b.make_stream(24, seed=1))
+    a.ingest(ua, batch_size=4)
+    b.ingest(ub[:8], batch_size=4)
+    b.swap_engine("device")
+    b.ingest(ub[8:16], batch_size=4)
+    b.swap_engine("ripple")
+    b.ingest(ub[16:], batch_size=4)
+    for l, (ha, hb) in enumerate(zip(a.sync().H, b.sync().H)):
+        np.testing.assert_allclose(ha, hb, atol=ATOL, rtol=RTOL,
+                                   err_msg=f"swap layer {l}")
+    _assert_contributor_invariant(b)
+    _assert_exact(b, "post-swap")
+
+
+def test_checkpoint_roundtrips_contributors(tmp_path):
+    s = _build("gc-min", "ripple", ckpt_dir=str(tmp_path), ckpt_every=10_000)
+    updates = list(s.make_stream(30, seed=1))
+    s.ingest(updates[:15], batch_size=5)
+    s.checkpoint()
+    C_at_ckpt = [c.copy() for c in s.sync().C]
+    s.ingest(updates[15:], batch_size=5)
+    assert s.restore() >= 0
+    for c, cref in zip(s.state.C, C_at_ckpt):
+        np.testing.assert_array_equal(c, cref)
+    s.ingest(updates[15:], batch_size=5)
+    _assert_exact(s, "post-restore")
+
+
+# ---------------------------------------------------------------------------
+# unit coverage: the algebra primitives + stream knobs
+# ---------------------------------------------------------------------------
+def test_aggregator_registry():
+    assert get_aggregator("sum").invertible
+    assert get_aggregator("mean").by_degree
+    assert get_aggregator("wsum").weighted
+    for nm, agg in (("max", MAX), ("min", MIN)):
+        assert get_aggregator(nm) is agg
+        assert not agg.invertible and agg.tracks_contributors
+    assert MAX.identity == -np.inf and MIN.identity == np.inf
+    with pytest.raises(KeyError, match="unknown aggregator"):
+        get_aggregator("median")
+
+
+def test_np_segment_extremum_witnesses():
+    rng = np.random.default_rng(0)
+    vals = rng.normal(size=(12, 4)).astype(np.float32)
+    seg = np.array([0, 0, 0, 1, 1, 2, 2, 2, 2, 4, 4, 4])
+    src = np.arange(100, 112)
+    S, C = np_segment_extremum(MAX, vals, seg, 5, src)
+    for r in range(5):
+        members = np.nonzero(seg == r)[0]
+        if members.size == 0:
+            assert np.all(S[r] == -np.inf) and np.all(C[r] == -1)
+            continue
+        np.testing.assert_array_equal(S[r], vals[members].max(axis=0))
+        np.testing.assert_array_equal(vals[C[r] - 100, np.arange(4)], S[r])
+
+
+def test_stream_mix_and_skew():
+    s = _build("gc-s", "ripple", n=200, m=1200)
+    stream = list(s.make_stream(300, seed=0, mix=(0, 3, 1), skew=1.5))
+    adds = [u for u in stream if isinstance(u, EdgeUpdate) and u.add]
+    dels = [u for u in stream if isinstance(u, EdgeUpdate) and not u.add]
+    feats = [u for u in stream if isinstance(u, FeatureUpdate)]
+    assert not adds
+    assert len(dels) > 2 * len(feats) > 0
+    # hot-vertex skew: the head of the id space absorbs most updates
+    targets = np.array([u.dst for u in dels] + [u.vertex for u in feats])
+    assert np.median(targets) < s.graph.n // 4
+    with pytest.raises(ValueError, match="mix"):
+        s.make_stream(10, mix=(0, 0, 0))
+
+
+# ---------------------------------------------------------------------------
+# property-based search (hypothesis-optional, like test_engine_equivalence)
+# ---------------------------------------------------------------------------
+def _monotonic_exactness_case(seed: int, name: str) -> None:
+    from repro.core import (DynamicGraph, InferenceState, RippleEngine,
+                            erdos_renyi, params_to_numpy)
+    wl = make_workload(name, n_layers=2, d_in=6, d_hidden=8, n_classes=4)
+    src, dst, w = erdos_renyi(16, 48, seed=seed % 7)
+    g = DynamicGraph(16, src, dst, w)
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(16, 6)).astype(np.float32)
+    params = wl.init_params(jax.random.PRNGKey(0))
+    state = InferenceState.bootstrap(wl, params, x, g)
+    eng = RippleEngine(wl, params_to_numpy(params), g, state)
+    for _ in range(3):
+        batch = UpdateBatch()
+        for _ in range(4):
+            kind = rng.integers(0, 3)
+            u, v = rng.integers(0, 16, size=2)
+            if kind == 0 and u != v:
+                batch.edges.append(EdgeUpdate(int(u), int(v), True))
+            elif kind == 1 and u != v:
+                batch.edges.append(EdgeUpdate(int(u), int(v), False))
+            else:
+                batch.features.append(FeatureUpdate(
+                    int(u), rng.normal(size=6).astype(np.float32)))
+        eng.apply_batch(batch)
+        H, _ = full_inference(wl, params, jax.numpy.asarray(state.H[0]),
+                              *g.coo(), g.in_degree)
+        for l, href in enumerate(H):
+            np.testing.assert_allclose(state.H[l], np.asarray(href),
+                                       atol=ATOL, rtol=RTOL)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           name=st.sampled_from(MONOTONIC_WORKLOAD_NAMES))
+    def test_property_monotonic_exactness(seed, name):
+        _monotonic_exactness_case(seed, name)
+else:
+    # without hypothesis, fall back to a fixed seeded sweep instead of
+    # skipping — the deterministic cases still run everywhere
+    @pytest.mark.parametrize("name", MONOTONIC_WORKLOAD_NAMES)
+    def test_property_monotonic_exactness(name):
+        for seed in (0, 17, 4242):
+            _monotonic_exactness_case(seed, name)

@@ -50,6 +50,29 @@ def test_delta_apply(R, Din, Dout, mean, relu):
 
 
 # ---------------------------------------------------------------------------
+@pytest.mark.parametrize("R,Din,Dout", [(64, 32, 16), (128, 128, 128),
+                                        (33, 48, 7), (256, 64, 200)])
+@pytest.mark.parametrize("maximize,relu", [(True, True), (False, True),
+                                           (True, False)])
+def test_extremum_apply(R, Din, Dout, maximize, relu):
+    from repro.kernels.extremum_apply import extremum_apply
+    from repro.kernels.extremum_apply.ref import extremum_apply_ref
+    ident = -jnp.inf if maximize else jnp.inf
+    S = jnp.asarray(RNG.normal(size=(R, Din)), jnp.float32)
+    # empty tracked rows hold the aggregator identity
+    S = S.at[jnp.asarray(RNG.choice(R, size=R // 8, replace=False))].set(ident)
+    M = jnp.asarray(RNG.normal(size=(R, Din)), jnp.float32)
+    # rows with no candidates this hop carry the identity mailbox
+    M = M.at[jnp.asarray(RNG.choice(R, size=R // 4, replace=False))].set(ident)
+    W = jnp.asarray(RNG.normal(size=(Din, Dout)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=Dout), jnp.float32)
+    Sn, h = extremum_apply(S, M, W, b, maximize=maximize, relu=relu)
+    Sr, hr = extremum_apply_ref(S, M, W, b, maximize=maximize, relu=relu)
+    np.testing.assert_array_equal(np.asarray(Sn), np.asarray(Sr))
+    np.testing.assert_allclose(h, hr, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 @pytest.mark.parametrize("V,B,hot,d", [(100, 8, 1, 16), (1000, 32, 4, 64),
                                        (5000, 16, 8, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
