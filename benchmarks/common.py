@@ -47,16 +47,38 @@ def engine_for(kind: str, wl, params, g, state):
 
 
 def run_stream(engine, g, holdout, n_updates: int, batch_size: int,
-               d_in: int, seed: int = 1, **stream_kwargs):
+               d_in: int, seed: int = 1, warmup: int = 0, **stream_kwargs):
     """Returns (throughput up/s, median latency s, stats list).
 
-    ``stream_kwargs`` pass through to ``make_stream`` (``mix``, ``skew``,
-    ``feature_scale``)."""
+    ``warmup`` batches are applied before the clock starts — jitted
+    engines compile their cap schedules on the first few batches, and
+    steady-state throughput is the number every engine is compared on.
+    Pipelined engines are drained (``flush``) at both clock edges so the
+    wall time (and the throughput derived from it) covers exactly the
+    timed updates; note their per-batch ``wall_seconds`` — and thus the
+    median latency returned here — measures the pipelined apply call
+    (routing + previous-batch resolution + dispatch), not the isolated
+    device latency of one batch, so latency comparisons across engines
+    should use synchronous mode.  ``stream_kwargs`` pass through to
+    ``make_stream`` (``mix``, ``skew``, ``feature_scale``)."""
     stream = make_stream(g, holdout, n_updates, d_in, seed=seed,
                          **stream_kwargs)
+    batches = list(stream.batches(batch_size))
+    assert warmup < len(batches), \
+        f"warmup ({warmup}) consumed all {len(batches)} batches — nothing " \
+        "left to time"
+    flush = getattr(engine, "flush", None)
+    n_timed = 0
+    for batch in batches[:warmup]:
+        engine.apply_batch(batch)
+    if flush is not None:
+        flush()
     stats, t0 = [], time.perf_counter()
-    for batch in stream.batches(batch_size):
+    for batch in batches[warmup:]:
         stats.append(engine.apply_batch(batch))
+        n_timed += len(batch)
+    if flush is not None:
+        flush()
     wall = time.perf_counter() - t0
     lat = np.median([s.wall_seconds for s in stats])
-    return len(stream) / wall, lat, stats
+    return n_timed / wall, lat, stats

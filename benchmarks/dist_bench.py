@@ -38,7 +38,7 @@ def run(parts: int, mode: str, n=1500, m=30000, batch=100, n_updates=600,
     stream = session.make_stream(n_updates, seed=1, mix=mix)
 
     monotonic = session.workload.spec.monotonic
-    comm, pulls, lat, host = [], [], [], []
+    comm, pulls, lat, host, shrinks, reaggs = [], [], [], [], [], []
     first = True
     for b in stream.batches(batch):
         rep = session.ingest(b)
@@ -49,6 +49,8 @@ def run(parts: int, mode: str, n=1500, m=30000, batch=100, n_updates=600,
             # monotonic comm interleaves [halo, pull] per hop; the pull
             # slots carry the SHRINK-only vs pull-everything contrast
             pulls.append(sum(slots[1::2]) if monotonic else 0)
+            shrinks.append(rep.results[0].shrink_events)
+            reaggs.append(rep.results[0].rows_reaggregated)
             host.append(session.engine.impl.last_host_seconds)
         first = False
     thr = n_updates / max(sum(lat), 1e-9)
@@ -63,6 +65,8 @@ def run(parts: int, mode: str, n=1500, m=30000, batch=100, n_updates=600,
             "updates_per_sec": float(thr),
             "mean_comm_slots": float(np.mean(comm)),
             "mean_pull_slots": float(np.mean(pulls)),
+            "shrink_events_per_batch": float(np.mean(shrinks)),
+            "rows_reaggregated_per_batch": float(np.mean(reaggs)),
             "median_host_seconds": float(np.median(host)),
             "csr_rebuilds": int(csr.rebuilds),
             "csr_row_refreshes": int(csr.row_refreshes)}

@@ -209,12 +209,89 @@ def bench_single():
              f"rp_reagg={filtered[name]['ripple_rows_reaggregated']:.0f} "
              f"rc_reagg={filtered[name]['rc_rows_reaggregated']:.0f} "
              f"ratio={filtered[name]['rc_over_ripple_reagg']:.1f}x")
+    # ---- device-resident engine: steady-state device-vs-host pairs -------
+    # The jitted engine wins where per-batch work is large: monotonic
+    # re-aggregation (gs-max) and dense graphs (products-like); on small
+    # sparse invertible streams the host's exact-size NumPy path stays
+    # ahead on CPU, so those are the pairs the CI guard holds it to.
+    # ``warmup`` batches let the adaptive cap schedule settle (compiles
+    # excluded), matching how a serving deployment amortizes compilation.
+    mix_for = lambda wl_: ((1, 3, 1), 0.8) if wl_.spec.monotonic \
+        else ((1, 1, 1), 0.0)
+    # always the serving protocol (batch=100): the adaptive cap schedule
+    # needs a few same-scale batches to settle, so smoke mode shortens the
+    # timed stream rather than shrinking the batches
+    dev_bs = 100
+    dev_upd, dev_warm = (2000, 12) if smoke else (3000, 12)
+    device_rows = []
+    for name, graph in (("gs-max", "arxiv-like"), ("gc-s", "products-like")):
+        for kind in ("ripple", "device"):
+            wl, g, x, params, holdout = setup(graph, name, n_layers=2)
+            st = InferenceState.bootstrap(wl, params, x, g)
+            eng = engine_for(kind, wl, params, g, st)
+            mix, skew = mix_for(wl)
+            thr, lat, stats = run_stream(eng, g, holdout, dev_upd, dev_bs,
+                                         64, warmup=dev_warm, mix=mix,
+                                         skew=skew)
+            rec = {"workload": name, "graph": graph, "engine": kind,
+                   "median_latency_s": float(lat),
+                   "updates_per_sec": float(thr),
+                   # median-derived: robust to a stray recompile in the
+                   # timed window (the wall-clock ups stays for honesty)
+                   "steady_updates_per_sec": float(dev_bs / lat),
+                   "shrink_events_per_batch":
+                       float(np.mean([s.shrink_events for s in stats])),
+                   "rows_reaggregated_per_batch":
+                       float(np.mean([s.rows_reaggregated for s in stats]))}
+            device_rows.append(rec)
+            emit(f"single/device_vs_host/{graph}/{name}/{kind}", lat * 1e6,
+                 f"ups={thr:.0f} steady={rec['steady_updates_per_sec']:.0f} "
+                 f"shrink={rec['shrink_events_per_batch']:.1f}")
+
+    # ---- device engine graph-size (in)sensitivity -------------------------
+    # Same workload/stream at growing |V|/|E| (constant average degree, so
+    # the frontier — the work that should set the cost — stays put).  The
+    # persistent CSR mirror makes per-batch host->device traffic O(touched
+    # rows): exactly one full pool upload per run, counted below.
+    from repro.core import DynamicGraph, erdos_renyi, make_workload
+    from repro.data.streams import snapshot_split
+    import jax as _jax
+    scale_points = ((4000, 28000), (16000, 112000)) if smoke else \
+        ((4000, 28000), (16000, 112000), (32000, 224000))
+    scaling = []
+    for n_v, m_e in scale_points:
+        wl = make_workload("gc-s", n_layers=2, d_in=64, d_hidden=64,
+                           n_classes=16)
+        src, dst, w = erdos_renyi(n_v, m_e, seed=0)
+        snap, holdout = snapshot_split(src, dst, w, 0.1, seed=0)
+        g = DynamicGraph(n_v, *snap)
+        x = np.random.default_rng(0).normal(size=(n_v, 64)).astype(np.float32)
+        params = wl.init_params(_jax.random.PRNGKey(0))
+        st = InferenceState.bootstrap(wl, params, x, g)
+        eng = engine_for("device", wl, params, g, st)
+        thr, lat, _ = run_stream(eng, g, holdout, dev_upd, dev_bs, 64,
+                                 warmup=dev_warm)
+        mirror = eng.impl.out_mirror
+        scaling.append({"n": n_v, "m": m_e, "updates_per_sec": float(thr),
+                        "median_latency_s": float(lat),
+                        "mirror_uploads": int(mirror.uploads),
+                        "mirror_rebuilds": int(mirror.rebuilds),
+                        "mirror_row_refreshes": int(mirror.row_refreshes)})
+        emit(f"single/device_scaling/n{n_v}", lat * 1e6,
+             f"ups={thr:.0f} mirror_uploads={mirror.uploads}")
+    ups_ratio = min(s["updates_per_sec"] for s in scaling) \
+        / max(s["updates_per_sec"] for s in scaling)
+    emit("single/device_scaling/ratio", 0.0, f"min_over_max={ups_ratio:.2f}")
+
     out = os.path.join(os.path.dirname(__file__), "..", "BENCH_single.json")
     with open(out, "w") as f:
         json.dump({"bench": "single", "graph": "arxiv-like",
                    "n_updates": n_upd, "batch_size": bs, "smoke": smoke,
-                   "results": records, "filtered_vs_rc": filtered}, f,
-                  indent=2)
+                   "results": records, "filtered_vs_rc": filtered,
+                   "device_vs_host": device_rows,
+                   "device_scaling": {"points": scaling,
+                                      "ups_ratio_min_over_max": ups_ratio}},
+                  f, indent=2)
     print(f"wrote {os.path.relpath(out)}", flush=True)
 
 

@@ -101,7 +101,31 @@ class RecomputeAdapter(_HostAdapter):
     _impl_cls = RecomputeEngine
 
 
-@register_engine("device", "jit")
+_DEVICE_OPTIONS = (
+    EngineOption("min_bucket", 64, "smallest static buffer capacity"),
+    EngineOption("donate", True,
+                 "donate the H/S/C/k device buffers through the jitted "
+                 "propagate so XLA updates them in place (disable for A/B "
+                 "equivalence checks against the copying path)"),
+    EngineOption("use_pallas", False,
+                 "run the hop apply through the fused Pallas kernels "
+                 "(delta_apply / extremum_apply) — interpret mode off-TPU, "
+                 "real kernels on TPU; the jnp path is the oracle"),
+    EngineOption("async_dispatch", False,
+                 "overlap host routing of batch t+1 with device compute of "
+                 "batch t; the overflow flag is checked lazily and "
+                 "``apply_batch`` reports the previous batch's affected ids "
+                 "(flush()/sync() drain exactly)"),
+    EngineOption("debug_checks", False,
+                 "assert the on-device in-degree vector k matches the host "
+                 "graph after every batch"),
+    EngineOption("warm", True,
+                 "precompile the rung-0 cap schedule at construction via a "
+                 "sentinel no-op batch"),
+)
+
+
+@register_engine("device", "jit", options=_DEVICE_OPTIONS)
 class DeviceAdapter:
     """Jitted device propagation; state lives on device between batches.
 
@@ -111,21 +135,43 @@ class DeviceAdapter:
     """
 
     def __init__(self, workload: Workload, params: list,
-                 graph: DynamicGraph, state: InferenceState):
+                 graph: DynamicGraph, state: InferenceState, *,
+                 min_bucket: int = 64, donate: bool = True,
+                 use_pallas: bool = False, async_dispatch: bool = False,
+                 debug_checks: bool = False, warm: bool = True):
         self._host = state
-        self._impl = DeviceEngine(workload, params, graph, state)
+        self._async = async_dispatch
+        self._impl = DeviceEngine(workload, params, graph, state,
+                                  min_bucket=min_bucket, donate=donate,
+                                  use_pallas=use_pallas,
+                                  async_dispatch=async_dispatch,
+                                  debug_checks=debug_checks, warm=warm)
 
     def apply_batch(self, batch: UpdateBatch) -> UpdateResult:
         t0 = time.perf_counter()
         affected = self._impl.apply_batch(batch)
-        # async dispatch: without blocking on the updated device state the
-        # clock stops before XLA finishes, under-reporting device latency
-        jax.block_until_ready((self._impl.state.H, self._impl.state.S))
+        if not self._async:
+            # the resolve above already blocked on the overflow flag; this
+            # pins wall_seconds to the fully-materialized state
+            jax.block_until_ready((self._impl.state.H, self._impl.state.S))
         return UpdateResult(affected=affected,
                             wall_seconds=time.perf_counter() - t0,
-                            affected_per_hop=[int(affected.size)])
+                            affected_per_hop=[int(affected.size)],
+                            shrink_events=self._impl.last_shrink_events,
+                            rows_reaggregated=self._impl.last_rows_reaggregated)
+
+    def flush(self) -> None:
+        """Drain the async pipeline (no-op when synchronous)."""
+        self._impl.flush()
+
+    @property
+    def impl(self) -> DeviceEngine:
+        """The underlying engine (mirror counters, ladder stats) for
+        benches — mirrors DistAdapter's public accessor."""
+        return self._impl
 
     def sync(self) -> InferenceState:
+        self._impl.flush()
         dev = self._impl.state
         for h_host, h_dev in zip(self._host.H, dev.H):
             h_host[...] = np.asarray(h_dev)
@@ -142,7 +188,9 @@ class DeviceAdapter:
         return self.sync()
 
     def query(self, vertices: np.ndarray) -> np.ndarray:
-        """Backend-native read: final-layer rows straight off the device."""
+        """Backend-native read: final-layer rows straight off the device
+        (drains the async pipeline first so reads see every applied batch)."""
+        self._impl.flush()
         return np.asarray(self._impl.state.H[-1][jnp.asarray(vertices)])
 
 
@@ -273,7 +321,9 @@ class DistAdapter:
         return UpdateResult(
             affected=affected,
             wall_seconds=time.perf_counter() - t0,
-            messages_per_hop=[int(c) for c in self._impl.last_comm])
+            messages_per_hop=[int(c) for c in self._impl.last_comm],
+            shrink_events=self._impl.last_shrink_events,
+            rows_reaggregated=self._impl.last_rows_reaggregated)
 
     def sync(self) -> InferenceState:
         return self._impl.gather_state(self._host)

@@ -237,6 +237,11 @@ class InferenceSession:
                     bs = max(1, bs // 2)
                 elif dt * 1e3 < deadline / 4 and bs < max_bs:
                     bs = min(max_bs, bs * 2)
+        # pipelined engines (device async_dispatch) may still have a batch
+        # in flight; drain it so throughput accounting is honest
+        flush = getattr(self.engine, "flush", None)
+        if flush is not None:
+            flush()
         report.wall_seconds = time.perf_counter() - t_start
         report.final_batch_size = bs
         return report

@@ -168,23 +168,73 @@ def get_aggregator(name: str) -> Aggregator:
 # Host-side (NumPy) primitives shared by the engines
 # ---------------------------------------------------------------------------
 def np_segment_extremum(agg: MonotonicAgg, vals: np.ndarray, seg: np.ndarray,
-                        n_rows: int, src: np.ndarray
+                        n_rows: int, src: np.ndarray, *,
+                        base: np.ndarray | None = None,
+                        base_refs: np.ndarray | None = None
                         ) -> tuple[np.ndarray, np.ndarray]:
-    """Segment min/max with contributor refs.
+    """Segment min/max with contributor refs (host binding).
 
     ``vals [E, d]`` grouped by ``seg [E]`` into ``n_rows`` rows; ``src [E]``
     is the contributing vertex id of each value.  Returns ``(S [n_rows, d],
     C [n_rows, d])`` with identity / -1 in empty rows.  Contributor
     tie-breaks are arbitrary (any witness is valid).
+
+    With ``base [n_rows, d]`` the segment extremum is folded into an
+    existing aggregate and witnesses are taken against the *folded* result,
+    so covered candidates yield no witness; dims the base still wins keep
+    ``base_refs`` (required with ``base``).  This is the same signature the
+    jitted engines consume via :func:`jnp_segment_extremum`.
     """
     d = vals.shape[1]
     S = np.full((n_rows, d), agg.identity, dtype=np.float32)
     agg.ufunc.at(S, seg, vals)
+    if base is not None:
+        S = agg.ufunc(S, base)
     C = np.full((n_rows, d), -1, dtype=np.int32)
     if vals.shape[0]:
         jj, dd = np.nonzero(vals == S[seg])
         C[seg[jj], dd] = src[jj]
+    if base_refs is not None:
+        C = np.where(C >= 0, C, base_refs)
     return S, C
+
+
+def jnp_segment_extremum(agg: MonotonicAgg, vals, seg, n_rows: int, src, *,
+                         base=None, base_refs=None):
+    """jnp segment min/max with contributor refs (the jitted engines' half
+    of the :func:`np_segment_extremum` contract; one signature, two array
+    modules).
+
+    ``vals [E, d]`` are native-space values grouped by ``seg [E]`` into
+    ``n_rows`` rows (``seg == n_rows`` marks padding lanes and contributes
+    nothing); ``src [E]`` the contributing vertex ids.  All reductions run
+    in max-space (``agg.sign * value``) so one body serves max and min.
+    Returns ``(S [n_rows, d], C [n_rows, d])`` with ``agg.identity`` / -1
+    in empty rows.
+
+    With ``base`` the extremum is folded into an existing aggregate
+    (``extremum(base, segment_extremum)``) and witnesses are computed
+    against the folded result — candidates the base covers yield no
+    witness; dims the base wins keep ``base_refs``.  This is the GROW fold
+    used at the device/dist candidate sites; the SHRINK re-aggregation
+    sites call it base-less.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    sign = agg.sign
+    vms = sign * vals
+    S_ms = jax.ops.segment_max(vms, seg, num_segments=n_rows + 1)[:n_rows]
+    if base is not None:
+        S_ms = jnp.maximum(S_ms, sign * base)
+    valid = (seg < n_rows)[:, None]
+    win = (vms == S_ms[jnp.minimum(seg, n_rows - 1)]) & valid
+    C = jnp.maximum(jax.ops.segment_max(
+        jnp.where(win, src[:, None].astype(jnp.int32), -1), seg,
+        num_segments=n_rows + 1)[:n_rows], -1)
+    if base_refs is not None:
+        C = jnp.where(C >= 0, C, base_refs)
+    return sign * S_ms, C
 
 
 def np_shrink_mask(agg: MonotonicAgg, C_rows: np.ndarray, S_rows: np.ndarray,

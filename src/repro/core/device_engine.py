@@ -15,16 +15,31 @@ fixed dataflow while the work stays proportional to the frontier size
  - self-dependent workloads (SAGE/GIN) inject zero-valued messages from the
    frontier to itself so "recipients" uniformly equals "affected".
 
-Overflow of any bucket is reported (never silently truncated); the caller
-retries with the next power-of-two bucket.  The function is functional
-(returns new state), so a failed attempt commits nothing.
+Device residency (the per-batch cost contract): the adjacency lives in a
+persistent :class:`DeviceCSRMirror` (slack-pool CSR maintained by
+touched-row scatters, full re-upload only on slack overflow), the
+``DeviceState`` buffers are *donated* through the jitted propagation so XLA
+updates H/S/C in place instead of copying every layer, and the in-degree
+vector ``k`` is maintained on device from each batch's add/delete counts —
+so per-batch host→device traffic and HBM writes are O(frontier), never
+O(|E|) or O(|V|·d·L).
+
+To keep the commits-nothing-on-overflow contract *with* donation, the
+propagation is two-phase: phase 1 computes every hop's compact row patches
+(reads only — later hops read earlier hops' values through a patch-gather,
+never through a scatter), accumulating the exact overflow flag; phase 2
+scatters all patches with indices gated on the flag (an overflowing attempt
+drops every write, so the returned — possibly aliased — buffers hold the
+pre-batch values bit-exactly and the ladder can retry).
 
 Monotonic workloads (max/min) run through ``propagate_monotonic`` instead:
 candidate extrema compact into per-row segment-max mailboxes, SHRINK rows
 (tracked contributor lost) pull their in-neighborhood from a mirrored
 in-CSR, and the next frontier keeps only rows whose embedding actually
-changed (filtered propagation) — see core/aggregators.py for the algebra
-and kernels/extremum_apply for the fused TPU apply of this family.
+changed (filtered propagation) — see core/aggregators.py for the algebra.
+With ``pallas=True`` the hop apply runs through the fused Pallas kernels
+(kernels/delta_apply, kernels/extremum_apply) — interpret mode off-TPU,
+real kernels on TPU — with the jnp path kept as the oracle.
 """
 from __future__ import annotations
 
@@ -35,7 +50,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graph import DynamicGraph
+from .aggregators import jnp_segment_extremum
+from .graph import _GROW, _MIN_SLACK, DynamicGraph, flat_row_indices
 from .workloads import Workload
 
 
@@ -59,35 +75,180 @@ class DeviceCSR(NamedTuple):
         return cls.from_half(g.out)
 
 
+@partial(jax.jit, donate_argnames=("col", "w", "length"),
+         static_argnames=("kb",))
+def _mirror_scatter(col, w, length, ints, slot_w, *, kb: int):
+    """Touched-row refresh on device: scatter the rows' fresh contents into
+    the persistent pool (out-of-range pad indices drop).  ``ints`` packs
+    [slot_idx | slot_col | row_idx | row_len] into one upload (``kb`` slot
+    entries, the rest split evenly between row ids and lengths)."""
+    slot_idx, slot_col = ints[:kb], ints[kb:2 * kb]
+    row_idx, row_len = jnp.split(ints[2 * kb:], 2)
+    col = col.at[slot_idx].set(slot_col, mode="drop")
+    w = w.at[slot_idx].set(slot_w, mode="drop")
+    length = length.at[row_idx].set(row_len, mode="drop")
+    return col, w, length
+
+
+class DeviceCSRMirror:
+    """Persistent device-resident slack-pool CSR of one adjacency half.
+
+    The device_engine sibling of dist's ``PartitionedCSR``: rows own
+    slack-padded slot ranges in a flat pool (power-of-two total size for
+    stable jit keys).  ``refresh_rows`` re-copies only the rows a batch
+    touched — a vectorized ragged gather on the host half followed by one
+    donated device scatter, O(sum of touched row degrees) host→device
+    traffic.  A full pool upload happens exactly once at construction and
+    again only when a row outgrows its slack (``rebuilds``); the counters
+    let tests assert the no-O(E)-per-batch contract.
+    """
+
+    def __init__(self, half, *, min_pool: int = 1024):
+        from repro.utils import next_bucket
+        self._next_bucket = next_bucket
+        self.half = half            # backing host _AdjHalf (authoritative)
+        self.min_pool = min_pool
+        self.uploads = 0            # full-pool uploads (init + rebuilds)
+        self.rebuilds = -1          # slack-overflow re-layouts
+        self.row_refreshes = 0      # rows refreshed incrementally
+        self._rebuild()
+
+    def _rebuild(self) -> None:
+        n = self.half.n
+        deg = self.half.length.astype(np.int64)
+        cap = np.maximum((deg * _GROW).astype(np.int64) + _MIN_SLACK, deg)
+        start = np.zeros(n, dtype=np.int64)
+        if n:
+            np.cumsum(cap[:-1], out=start[1:])
+        pool = self._next_bucket(int(start[-1] + cap[-1]) if n else 1,
+                                 minimum=self.min_pool)
+        col = np.full(pool, -1, dtype=np.int32)
+        w = np.zeros(pool, dtype=np.float32)
+        if deg.sum():
+            src_idx = flat_row_indices(self.half.start, deg)
+            dst_idx = flat_row_indices(start, deg)
+            col[dst_idx] = self.half.col[src_idx]
+            w[dst_idx] = self.half.w[src_idx]
+        self._start_h, self._cap_h = start, cap
+        self.pool = pool
+        self.col = jnp.asarray(col)
+        self.w = jnp.asarray(w)
+        self.start = jnp.asarray(start, dtype=jnp.int32)
+        self.length = jnp.asarray(deg, dtype=jnp.int32)
+        self.uploads += 1
+        self.rebuilds += 1
+
+    def refresh_rows(self, rows: np.ndarray) -> None:
+        """Re-copy the given rows from the backing host half (the per-batch
+        maintenance path after topology updates mutate the graph)."""
+        from repro.utils import pad_to
+        rows = np.asarray(rows, dtype=np.int64)
+        if rows.size == 0:
+            return
+        deg = self.half.length[rows]
+        if np.any(deg > self._cap_h[rows]):
+            self._rebuild()         # some row outgrew its slack
+            return
+        src_idx = flat_row_indices(self.half.start[rows], deg)
+        dst_idx = flat_row_indices(self._start_h[rows], deg)
+        kb = self._next_bucket(max(int(dst_idx.size), 1), minimum=64)
+        rb = self._next_bucket(int(rows.size), minimum=64)
+        n = self.half.n
+        ints = np.concatenate([
+            pad_to(dst_idx, kb, fill=self.pool),
+            pad_to(self.half.col[src_idx], kb),
+            pad_to(rows, rb, fill=n),
+            pad_to(deg, rb)]).astype(np.int32)
+        self.col, self.w, self.length = _mirror_scatter(
+            self.col, self.w, self.length, jnp.asarray(ints),
+            jnp.asarray(pad_to(self.half.w[src_idx], kb)), kb=kb)
+        self.row_refreshes += int(rows.size)
+
+    def device(self) -> DeviceCSR:
+        return DeviceCSR(col=self.col, w=self.w, start=self.start,
+                         length=self.length)
+
+
 class DeviceState(NamedTuple):
     H: tuple[jax.Array, ...]  # [n, d_l] per layer 0..L
     S: tuple[jax.Array, ...]  # [n, d_{l-1}] per layer 1..L ([0] placeholder)
-    k: jax.Array              # [n] in-degree
+    k: jax.Array              # [n] in-degree (maintained on device)
     C: tuple[jax.Array, ...] = ()  # monotonic contributor refs (int32,
     #                                index-aligned with S; () if invertible)
 
 
 class BatchDev(NamedTuple):
-    """A routed update batch in padded device form (sentinel index = n)."""
+    """A routed update batch in padded device form (sentinel index = n).
 
-    feat_idx: jax.Array   # [Fv] int32, vertex ids (n = pad)
-    feat_val: jax.Array   # [Fv, d0]
-    add_src: jax.Array    # [A] int32 (n = pad)
-    add_dst: jax.Array
-    add_w: jax.Array
-    del_src: jax.Array    # [D] int32 (n = pad)
-    del_dst: jax.Array
-    del_w: jax.Array
+    The index/weight vectors travel packed ([5, cap] / [2, cap]) so a batch
+    costs three host->device transfers instead of eight — per-transfer
+    dispatch overhead dominates these tiny uploads; the named accessors are
+    device-side slices that XLA fuses away.
+    """
+
+    ints: jax.Array       # [5, cap] int32: feat/add_src/add_dst/del_src/del_dst
+    ws: jax.Array         # [2, cap] f32: add_w, del_w
+    feat_val: jax.Array   # [cap, d0]
+
+    @property
+    def feat_idx(self) -> jax.Array:
+        return self.ints[0]
+
+    @property
+    def add_src(self) -> jax.Array:
+        return self.ints[1]
+
+    @property
+    def add_dst(self) -> jax.Array:
+        return self.ints[2]
+
+    @property
+    def del_src(self) -> jax.Array:
+        return self.ints[3]
+
+    @property
+    def del_dst(self) -> jax.Array:
+        return self.ints[4]
+
+    @property
+    def add_w(self) -> jax.Array:
+        return self.ws[0]
+
+    @property
+    def del_w(self) -> jax.Array:
+        return self.ws[1]
 
 
-def _hop_messages(n: int, h_l: jax.Array, csr: DeviceCSR,
+# ---------------------------------------------------------------------------
+# Deferred-commit plumbing: later hops read earlier hops' (rec_idx, h_new)
+# patches instead of scattered arrays, so all writes can be gated at the end
+# ---------------------------------------------------------------------------
+def _patch_pos(n: int, p_idx: jax.Array) -> jax.Array:
+    """Vertex id -> patch slot map (-1 where unpatched; sentinel ids drop)."""
+    pos = jnp.full((n,), -1, dtype=jnp.int32)
+    return pos.at[p_idx].set(jnp.arange(p_idx.shape[0], dtype=jnp.int32),
+                             mode="drop")
+
+
+def _patched(n: int, base: jax.Array, pos: jax.Array, p_val: jax.Array,
+             idx: jax.Array) -> jax.Array:
+    """Rows of ``base`` at ``idx`` as if the patch had been scattered."""
+    idx_c = jnp.minimum(idx, n - 1)
+    slot = pos[idx_c]
+    return jnp.where((slot >= 0)[:, None], p_val[jnp.maximum(slot, 0)],
+                     base[idx_c])
+
+
+def _hop_messages(n: int, h_pre: jax.Array, csr: DeviceCSR,
                   frontier: jax.Array, delta: jax.Array,
                   batch: BatchDev, *, weighted: bool, self_dep: bool,
                   e_cap: int):
     """Build the (dst, value) message stream for hop l -> l+1.
 
-    Returns (all_dst [E_tot], all_val [E_tot, d], n_edges_needed) where
-    E_tot = e_cap + A + D (+ F for self-dep zero-messages).
+    ``h_pre`` is the PRE-batch layer-l embedding array (pristine in the
+    deferred-commit scheme), which is exactly the ``h_old`` the add/delete
+    retraction messages need.  Returns (all_dst [E_tot], all_val [E_tot, d],
+    n_edges_needed) where E_tot = e_cap + A + D (+ F for self-dep).
     """
     f_cap = frontier.shape[0]
     degs = jnp.where(frontier < n, csr.length[jnp.minimum(frontier, n - 1)], 0)
@@ -105,19 +266,11 @@ def _hop_messages(n: int, h_l: jax.Array, csr: DeviceCSR,
     evalid = e < total
     flat = jnp.where(evalid, flat, 0)
     edst = jnp.where(evalid, csr.col[flat], n)
-    ew = csr.w[flat] if weighted else jnp.ones(e_cap, dtype=h_l.dtype)
+    ew = csr.w[flat] if weighted else jnp.ones(e_cap, dtype=h_pre.dtype)
     evals = delta[fid_c] * (ew * evalid)[:, None]
 
-    # position map frontier-vertex -> delta slot, for h_old lookups
-    pos = jnp.full((n,), -1, dtype=jnp.int32)
-    pos = pos.at[frontier].set(jnp.arange(f_cap, dtype=jnp.int32), mode="drop")
-
     def h_old(src: jax.Array) -> jax.Array:
-        src_c = jnp.minimum(src, n - 1)
-        h = h_l[src_c]
-        slot = pos[src_c]
-        sub = jnp.where((slot >= 0)[:, None], delta[jnp.maximum(slot, 0)], 0.0)
-        return h - sub
+        return h_pre[jnp.minimum(src, n - 1)]
 
     a_valid = (batch.add_src < n)[:, None]
     aw = batch.add_w if weighted else jnp.ones_like(batch.add_w)
@@ -139,6 +292,9 @@ def _compact_mailbox(n: int, all_dst: jax.Array, all_val: jax.Array,
     """Sort-by-destination compaction: unique recipients + summed mailboxes.
 
     Returns (rec_idx [r_cap] sentinel-padded, mailbox [r_cap, d], n_recipients).
+    Kept for the distributed halo path; the single-machine hops use the
+    sort-free :func:`_unique_recipients` (XLA's CPU sort is the single most
+    expensive op in the old formulation).
     """
     order = jnp.argsort(all_dst)  # sentinels (n) sort to the end
     sd = all_dst[order]
@@ -155,61 +311,155 @@ def _compact_mailbox(n: int, all_dst: jax.Array, all_val: jax.Array,
     return rec_idx, mailbox, n_rec
 
 
+def _unique_recipients(n: int, all_dst: jax.Array, r_cap: int):
+    """Recipient compaction: unique message destinations in ascending vertex
+    order plus the vertex -> mailbox-slot map.
+
+    Two regimes, chosen by static shape: when the message bucket is at
+    least half of |V|, a [n+1] presence mask + fixed-size ``nonzero`` is
+    cheapest (O(n), no sort); when the bucket is small relative to the
+    graph, an index sort keeps the cost O(E log E) — independent of |V|,
+    which is what keeps per-batch work graph-size-insensitive on large
+    graphs.  Both produce identical (ascending) recipient order.
+
+    Returns (rec_idx [r_cap] ascending + sentinel-n padded, pos [n+1] vertex
+    -> mailbox slot map (r_cap for non-recipients), n_recipients).
+    """
+    if all_dst.shape[0] >= n // 2:
+        mask = jnp.zeros((n + 1,), bool).at[jnp.minimum(all_dst, n)].set(True)
+        n_rec = mask[:n].sum()
+        rec_idx = jnp.nonzero(mask[:n], size=r_cap, fill_value=n)[0] \
+            .astype(jnp.int32)
+    else:
+        sd = jnp.sort(all_dst)  # sentinels (n) sort to the end
+        newseg = jnp.concatenate([jnp.ones((1,), bool), sd[1:] != sd[:-1]]) \
+            & (sd < n)
+        n_rec = newseg.sum()
+        seg_id = jnp.where(newseg, jnp.cumsum(newseg) - 1, r_cap)
+        rec_idx = jnp.full((r_cap,), n, dtype=jnp.int32) \
+            .at[seg_id].set(sd.astype(jnp.int32), mode="drop")
+    pos = jnp.full((n + 1,), r_cap, dtype=jnp.int32)
+    pos = pos.at[rec_idx].set(jnp.arange(r_cap, dtype=jnp.int32), mode="drop")
+    return rec_idx, pos, n_rec
+
+
+def _k_rows(n: int, state: DeviceState, batch: BatchDev, rec_idx: jax.Array,
+            pos_r: jax.Array, r_cap: int) -> jax.Array:
+    """Post-batch in-degree at the affected rows, from the batch's add/del
+    counts — O(bucket) segment sums instead of materializing a full [n]
+    updated-degree vector (the full vector is only written once, in the
+    gated phase-2 commit)."""
+    def cnt(dst):
+        slot = pos_r[jnp.minimum(dst, n)]
+        return jax.ops.segment_sum((dst < n).astype(jnp.float32), slot,
+                                   num_segments=r_cap + 1)[:r_cap]
+    return state.k[jnp.minimum(rec_idx, n - 1)] \
+        + cnt(batch.add_dst) - cnt(batch.del_dst)
+
+
 def _apply_hop(workload: Workload, params_l: dict, layer: int, n: int,
-               state: DeviceState, rec_idx: jax.Array, mailbox: jax.Array):
-    """Apply mailboxes at hop layer+1; returns (new state, next delta)."""
+               state: DeviceState, k_rows: jax.Array, patch,
+               rec_idx: jax.Array, mailbox: jax.Array, *, pallas: bool,
+               interpret: bool):
+    """Compute hop layer+1's row patch (no writes); returns
+    (S_rows, h_new, next delta)."""
     aff_c = jnp.minimum(rec_idx, n - 1)
     valid = (rec_idx < n)[:, None]
-    S_next = state.S[layer + 1]
-    S_rows = S_next[aff_c] + mailbox
-    S_next = S_next.at[rec_idx].set(S_rows, mode="drop")
-    x = workload.normalize(S_rows, state.k[aff_c])
-    h_prev = state.H[layer][aff_c]
-    h_new = workload.update_fn(layer)(params_l, h_prev, x)
+    S_base = state.S[layer + 1][aff_c]
+    pos = _patch_pos(n, patch[0])
+    h_prev = _patched(n, state.H[layer], pos, patch[1], rec_idx)
+    last = layer == workload.spec.n_layers - 1
+    if pallas and workload.family in ("gc", "sage"):
+        from repro.kernels.delta_apply import delta_apply
+        mean = getattr(workload.agg, "by_degree", False)
+        if workload.family == "gc":
+            S_rows, h_new = delta_apply(S_base, mailbox, k_rows,
+                                        params_l["w"], params_l["b"],
+                                        mean=mean, relu=not last,
+                                        interpret=interpret)
+        else:  # SAGE: fused neighbor term; self term stays a jnp matmul
+            S_rows, h_new = delta_apply(S_base, mailbox, k_rows,
+                                        params_l["w_nbr"], params_l["b"],
+                                        mean=mean, relu=False,
+                                        interpret=interpret)
+            h_new = h_new + h_prev @ params_l["w_self"]
+            if not last:
+                h_new = jnp.maximum(h_new, 0.0)
+    else:  # jnp oracle path (and GIN, whose MLP the kernel can't express)
+        S_rows = S_base + mailbox
+        x = workload.normalize(S_rows, k_rows)
+        h_new = workload.update_fn(layer)(params_l, h_prev, x)
     delta = (h_new - state.H[layer + 1][aff_c]) * valid
-    H_next = state.H[layer + 1].at[rec_idx].set(h_new, mode="drop")
-    new_state = DeviceState(
-        H=state.H[: layer + 1] + (H_next,) + state.H[layer + 2:],
-        S=state.S[: layer + 1] + (S_next,) + state.S[layer + 2:],
-        k=state.k, C=state.C)
-    return new_state, delta
+    return S_rows, h_new, delta
 
 
-@partial(jax.jit, static_argnames=("workload", "n", "caps"))
-def propagate(workload: Workload, n: int, caps: tuple[tuple[int, int], ...],
-              params: list[dict], state: DeviceState, csr: DeviceCSR,
-              batch: BatchDev):
+def _propagate_impl(workload: Workload, n: int,
+                    caps: tuple[tuple[int, int], ...],
+                    params: list[dict], state: DeviceState, csr: DeviceCSR,
+                    batch: BatchDev, *, pallas: bool = False,
+                    interpret: bool = True):
     """One full L-hop incremental propagation of a routed batch.
 
     caps[l] = (frontier_cap entering hop l+1 computation, edge_cap at hop l).
-    Returns (new_state, final_affected idx, overflow flag).
+    Returns (new_state, final_affected idx, overflow flag, sizes [L, 3]) —
+    ``sizes[l] = (recipients, edges, 0)`` actually needed at hop l, which
+    the engine's adaptive cap schedule feeds on.  Phase 1 below only reads;
+    phase 2 commits with overflow-gated scatters, so a failed attempt
+    returns the input values bit-exactly even when ``state`` was donated.
     """
     L = workload.spec.n_layers
     spec = workload.spec
 
-    # hop 0: apply feature updates
+    # ---- phase 1: per-hop row patches, reads only ------------------------
     fv = batch.feat_idx
-    old = state.H[0][jnp.minimum(fv, n - 1)]
-    delta0 = (batch.feat_val - old) * (fv < n)[:, None]
-    H0 = state.H[0].at[fv].set(batch.feat_val, mode="drop")
-    state = DeviceState(H=(H0,) + state.H[1:], S=state.S, k=state.k,
-                        C=state.C)
-    frontier, delta = fv, delta0
+    old0 = state.H[0][jnp.minimum(fv, n - 1)]
+    delta = (batch.feat_val - old0) * (fv < n)[:, None]
+    frontier = fv
+    patch = (fv, batch.feat_val)
     overflow = jnp.zeros((), dtype=bool)
-
+    hops = []
+    sizes = []
     for l in range(L):
         r_cap, e_cap = caps[l]
         all_dst, all_val, needed = _hop_messages(
             n, state.H[l], csr, frontier, delta, batch,
             weighted=spec.weighted, self_dep=spec.self_dependent, e_cap=e_cap)
         overflow |= needed > e_cap
-        rec_idx, mailbox, n_rec = _compact_mailbox(n, all_dst, all_val, r_cap)
+        rec_idx, pos_r, n_rec = _unique_recipients(n, all_dst, r_cap)
         overflow |= n_rec > r_cap
-        state, delta = _apply_hop(workload, params[l], l, n, state, rec_idx,
-                                  mailbox)
+        sizes.append(jnp.stack([n_rec.astype(jnp.int32),
+                                needed.astype(jnp.int32),
+                                jnp.int32(0)]))
+        seg = pos_r[jnp.minimum(all_dst, n)]
+        mailbox = jax.ops.segment_sum(all_val, seg,
+                                      num_segments=r_cap + 1)[:r_cap]
+        k_rows = _k_rows(n, state, batch, rec_idx, pos_r, r_cap)
+        S_rows, h_new, delta = _apply_hop(
+            workload, params[l], l, n, state, k_rows, patch, rec_idx, mailbox,
+            pallas=pallas, interpret=interpret)
+        hops.append((rec_idx, S_rows, h_new))
+        patch = (rec_idx, h_new)
         frontier = rec_idx
 
-    return state, frontier, overflow
+    # ---- phase 2: overflow-gated commit ----------------------------------
+    ok = ~overflow
+    gate = lambda idx: jnp.where(ok, idx, n)  # noqa: E731
+    H = list(state.H)
+    S = list(state.S)
+    H[0] = H[0].at[gate(fv)].set(batch.feat_val, mode="drop")
+    for l, (rec, S_rows, h_new) in enumerate(hops):
+        S[l + 1] = S[l + 1].at[gate(rec)].set(S_rows, mode="drop")
+        H[l + 1] = H[l + 1].at[gate(rec)].set(h_new, mode="drop")
+    k = state.k.at[gate(batch.add_dst)].add(1.0, mode="drop") \
+               .at[gate(batch.del_dst)].add(-1.0, mode="drop")
+    new_state = DeviceState(H=tuple(H), S=tuple(S), k=k, C=state.C)
+    return new_state, jnp.where(ok, frontier, n), overflow, jnp.stack(sizes)
+
+
+_PROP_STATIC = ("workload", "n", "caps", "pallas", "interpret")
+propagate = jax.jit(_propagate_impl, static_argnames=_PROP_STATIC)
+propagate_donated = jax.jit(_propagate_impl, static_argnames=_PROP_STATIC,
+                            donate_argnames=("state",))
 
 
 # ---------------------------------------------------------------------------
@@ -253,17 +503,22 @@ def _expand_frontier_edges(n: int, csr: DeviceCSR, frontier: jax.Array,
 
 def _monotonic_hop(workload: Workload, params_l: dict, layer: int, n: int,
                    state: DeviceState, out_csr: DeviceCSR, in_csr: DeviceCSR,
-                   batch: BatchDev, frontier: jax.Array, *,
-                   r_cap: int, e_cap: int, p_cap: int):
-    """One GROW/SHRINK hop layer -> layer+1; returns (state, frontier', ovf).
+                   batch: BatchDev, frontier: jax.Array, patch,
+                   *, r_cap: int, e_cap: int, p_cap: int,
+                   pallas: bool, interpret: bool):
+    """One GROW/SHRINK hop layer -> layer+1 (reads only); returns the hop
+    patch (rec_idx, S_new, C_new, h_new), the filtered next frontier, the
+    overflow flag, and (shrink_events, rows_reaggregated) counters.
 
     All extremum arithmetic runs in max-space (``sign * value``) so one code
-    path serves both max and min.
+    path serves both max and min; the post-update layer-l values are read
+    through the previous hop's patch (deferred-commit scheme).
     """
     agg = workload.agg
     sign = agg.sign
-    H_l, S_next, C_next = state.H[layer], state.S[layer + 1], state.C[layer + 1]
-    NEG = jnp.float32(-jnp.inf)
+    H_pre, S_next, C_next = state.H[layer], state.S[layer + 1], \
+        state.C[layer + 1]
+    pos_p = _patch_pos(n, patch[0])
 
     edst, esrc, needed = _expand_frontier_edges(n, out_csr, frontier, e_cap)
     overflow = needed > e_cap
@@ -280,16 +535,13 @@ def _monotonic_hop(workload: Workload, params_l: dict, layer: int, n: int,
     all_dst = msg_dst
     if workload.spec.self_dependent:
         all_dst = jnp.concatenate([all_dst, frontier])
-    rec_idx, _, n_rec = _compact_mailbox(
-        n, all_dst, jnp.zeros((all_dst.shape[0], 1), H_l.dtype), r_cap)
+    rec_idx, pos, n_rec = _unique_recipients(n, all_dst, r_cap)
     overflow |= n_rec > r_cap
     aff_c = jnp.minimum(rec_idx, n - 1)
-
-    pos = jnp.full((n + 1,), r_cap, dtype=jnp.int32)
-    pos = pos.at[rec_idx].set(jnp.arange(r_cap, dtype=jnp.int32), mode="drop")
     slot = jnp.where(valid, pos[jnp.minimum(msg_dst, n)], r_cap)
 
-    vals_ms = sign * H_l[jnp.minimum(msg_src, n - 1)]  # max-space values
+    vals = _patched(n, H_pre, pos_p, patch[1], msg_src)  # post-update values
+    vals_ms = sign * vals
 
     # ---- SHRINK classification against tracked (S, C) --------------------
     S_dst_ms = sign * S_next[jnp.minimum(msg_dst, n - 1)]
@@ -299,103 +551,162 @@ def _monotonic_hop(workload: Workload, params_l: dict, layer: int, n: int,
     shrink_msg = (jnp.any(covered & gone, axis=1) & valid).astype(jnp.int32)
     row_shrink = jax.ops.segment_max(shrink_msg, slot,
                                      num_segments=r_cap + 1)[:r_cap] > 0
+    n_shrink = shrink_msg.sum()
 
     # ---- SHRINK rows: pull + re-aggregate their current in-neighborhood --
     degs = jnp.where(row_shrink & (rec_idx < n), in_csr.length[aff_c], 0)
     psrc, fid, pvalid, pull_total = _ragged_gather(n, in_csr, aff_c, degs,
                                                    p_cap)
     overflow |= pull_total > p_cap
-    pv = jnp.where(pvalid[:, None], sign * H_l[jnp.minimum(psrc, n - 1)], NEG)
+    pvals = _patched(n, H_pre, pos_p, patch[1], psrc)
     pseg = jnp.where(pvalid, fid, r_cap)
-    S_sh = jax.ops.segment_max(pv, pseg, num_segments=r_cap + 1)[:r_cap]
-    win_p = (pv == S_sh[fid]) & pvalid[:, None]
-    C_sh = jax.ops.segment_max(
-        jnp.where(win_p, psrc[:, None].astype(jnp.int32), -1), pseg,
-        num_segments=r_cap + 1)[:r_cap]
-    C_sh = jnp.maximum(C_sh, -1)  # empty segments: int identity -> -1
+    S_sh, C_sh = jnp_segment_extremum(agg, pvals, pseg, r_cap, psrc)
 
-    base_S = jnp.where(row_shrink[:, None], S_sh, sign * S_next[aff_c])
+    base_S = jnp.where(row_shrink[:, None], S_sh, S_next[aff_c])
     base_C = jnp.where(row_shrink[:, None], C_sh, C_next[aff_c])
 
     # ---- GROW: fold candidates in (idempotent on re-aggregated rows) -----
     is_cand = valid & ~is_del
-    cv = jnp.where(is_cand[:, None], vals_ms, NEG)
     cslot = jnp.where(is_cand, slot, r_cap)
-    S_cand = jax.ops.segment_max(cv, cslot, num_segments=r_cap + 1)[:r_cap]
-    S_ms = jnp.maximum(base_S, S_cand)
-    win_c = (cv == S_ms[jnp.minimum(cslot, r_cap - 1)]) & is_cand[:, None]
-    C_cand = jax.ops.segment_max(
-        jnp.where(win_c, msg_src[:, None].astype(jnp.int32), -1), cslot,
-        num_segments=r_cap + 1)[:r_cap]
-    C_new = jnp.where(C_cand >= 0, C_cand, base_C)
-    S_new = sign * S_ms
+    S_new, C_new = jnp_segment_extremum(agg, vals, cslot, r_cap, msg_src,
+                                        base=base_S, base_refs=base_C)
 
     # ---- apply + filtered propagation ------------------------------------
-    x = workload.normalize(S_new, state.k[aff_c])
-    h_new = workload.update_fn(layer)(params_l, H_l[aff_c], x)
+    h_prev = _patched(n, H_pre, pos_p, patch[1], rec_idx)
+    last = layer == workload.spec.n_layers - 1
+    if pallas and workload.family in ("gc", "sage"):
+        from repro.kernels.extremum_apply import extremum_apply
+        # the kernel fuses the fold + finite-mask + matmul; feed it the
+        # pre-fold base rows and the candidate-extremum mailbox (identity
+        # in candidate-less rows, so the fold is a no-op there).  Non-
+        # candidate lanes already route to the dropped segment via cslot,
+        # and this expression matches the helper's internal reduction
+        # exactly so XLA CSEs the two into one segment pass.
+        cand_ms = jax.ops.segment_max(vals_ms, cslot,
+                                      num_segments=r_cap + 1)[:r_cap]
+        maximize = sign > 0
+        if workload.family == "gc":
+            S_new, h_new = extremum_apply(base_S, sign * cand_ms,
+                                          params_l["w"], params_l["b"],
+                                          maximize=maximize, relu=not last,
+                                          interpret=interpret)
+        else:  # SAGE: fused neighbor term; self term stays a jnp matmul
+            S_new, h_new = extremum_apply(base_S, sign * cand_ms,
+                                          params_l["w_nbr"], params_l["b"],
+                                          maximize=maximize, relu=False,
+                                          interpret=interpret)
+            h_new = h_new + h_prev @ params_l["w_self"]
+            if not last:
+                h_new = jnp.maximum(h_new, 0.0)
+    else:
+        # monotonic normalize is the finite-mask — k is unused by the
+        # algebra, so the pre-batch rows suffice for the call contract
+        x = workload.normalize(S_new, state.k[aff_c])
+        h_new = workload.update_fn(layer)(params_l, h_prev, x)
     changed = jnp.any(h_new != state.H[layer + 1][aff_c], axis=1) \
         & (rec_idx < n)
-    S_out = S_next.at[rec_idx].set(S_new, mode="drop")
-    C_out = C_next.at[rec_idx].set(C_new, mode="drop")
-    H_out = state.H[layer + 1].at[rec_idx].set(h_new, mode="drop")
-    new_state = DeviceState(
-        H=state.H[: layer + 1] + (H_out,) + state.H[layer + 2:],
-        S=state.S[: layer + 1] + (S_out,) + state.S[layer + 2:],
-        k=state.k,
-        C=state.C[: layer + 1] + (C_out,) + state.C[layer + 2:])
     frontier_next = jnp.where(changed, rec_idx, n)
-    return new_state, frontier_next, overflow
+    n_reagg = (row_shrink & (rec_idx < n)).sum()
+    sizes = jnp.stack([n_rec.astype(jnp.int32), needed.astype(jnp.int32),
+                       pull_total.astype(jnp.int32)])
+    return (rec_idx, S_new, C_new, h_new), frontier_next, overflow, sizes, \
+        jnp.stack([n_shrink, n_reagg.astype(jnp.int32)])
 
 
-@partial(jax.jit, static_argnames=("workload", "n", "caps"))
-def propagate_monotonic(workload: Workload, n: int,
-                        caps: tuple[tuple[int, int, int], ...],
-                        params: list[dict], state: DeviceState,
-                        out_csr: DeviceCSR, in_csr: DeviceCSR,
-                        batch: BatchDev):
+def _propagate_monotonic_impl(workload: Workload, n: int,
+                              caps: tuple[tuple[int, int, int], ...],
+                              params: list[dict], state: DeviceState,
+                              out_csr: DeviceCSR, in_csr: DeviceCSR,
+                              batch: BatchDev, *, pallas: bool = False,
+                              interpret: bool = True):
     """L-hop monotonic (max/min) propagation of a routed batch.
 
     caps[l] = (row_cap, edge_cap, pull_cap) at hop l; pull_cap bounds the
     total in-degree of SHRINK rows re-aggregated that hop.  Returns
-    (new_state, final frontier idx, overflow flag) — functional like
-    ``propagate``, so an overflowing attempt commits nothing.
+    (new_state, final frontier idx, overflow flag, sizes [L, 3] needed per
+    hop, [shrink_events, rows_reaggregated]) — phase-1/phase-2 deferred
+    commit like ``propagate``, so an overflowing attempt commits nothing
+    even under buffer donation.
     """
     L = workload.spec.n_layers
 
     fv = batch.feat_idx
     old = state.H[0][jnp.minimum(fv, n - 1)]
     changed0 = jnp.any(batch.feat_val != old, axis=1) & (fv < n)
-    H0 = state.H[0].at[fv].set(batch.feat_val, mode="drop")
-    state = DeviceState(H=(H0,) + state.H[1:], S=state.S, k=state.k,
-                        C=state.C)
     frontier = jnp.where(changed0, fv, n)  # hop-0 filtering: no-op writes stop
+    patch = (fv, batch.feat_val)
     overflow = jnp.zeros((), dtype=bool)
-
+    stats = jnp.zeros((2,), dtype=jnp.int32)
+    hops = []
+    sizes = []
     for l in range(L):
         r_cap, e_cap, p_cap = caps[l]
-        state, frontier, ovf = _monotonic_hop(
+        hop_patch, frontier, ovf, hop_sizes, hop_stats = _monotonic_hop(
             workload, params[l], l, n, state, out_csr, in_csr, batch,
-            frontier, r_cap=r_cap, e_cap=e_cap, p_cap=p_cap)
+            frontier, patch, r_cap=r_cap, e_cap=e_cap, p_cap=p_cap,
+            pallas=pallas, interpret=interpret)
         overflow |= ovf
-    return state, frontier, overflow
+        stats = stats + hop_stats
+        hops.append(hop_patch)
+        sizes.append(hop_sizes)
+        patch = (hop_patch[0], hop_patch[3])
+
+    # ---- overflow-gated commit -------------------------------------------
+    ok = ~overflow
+    gate = lambda idx: jnp.where(ok, idx, n)  # noqa: E731
+    H = list(state.H)
+    S = list(state.S)
+    C = list(state.C)
+    H[0] = H[0].at[gate(fv)].set(batch.feat_val, mode="drop")
+    for l, (rec, S_new, C_new, h_new) in enumerate(hops):
+        S[l + 1] = S[l + 1].at[gate(rec)].set(S_new, mode="drop")
+        C[l + 1] = C[l + 1].at[gate(rec)].set(C_new, mode="drop")
+        H[l + 1] = H[l + 1].at[gate(rec)].set(h_new, mode="drop")
+    k = state.k.at[gate(batch.add_dst)].add(1.0, mode="drop") \
+               .at[gate(batch.del_dst)].add(-1.0, mode="drop")
+    new_state = DeviceState(H=tuple(H), S=tuple(S), k=k, C=tuple(C))
+    return new_state, jnp.where(ok, frontier, n), overflow, \
+        jnp.stack(sizes), stats
+
+
+propagate_monotonic = jax.jit(_propagate_monotonic_impl,
+                              static_argnames=_PROP_STATIC)
+propagate_monotonic_donated = jax.jit(_propagate_monotonic_impl,
+                                      static_argnames=_PROP_STATIC,
+                                      donate_argnames=("state",))
 
 
 class DeviceEngine:
-    """Host driver around the jitted propagation with a bucket ladder.
+    """Host driver around the jitted propagation with a warm bucket ladder.
 
     Mirrors RippleEngine semantics; used by tests for cross-engine
     equivalence and by the dry-run/roofline path for the paper's own
-    workloads.
+    workloads.  Per-batch cost is frontier-proportional: the adjacency
+    lives in persistent :class:`DeviceCSRMirror` pools, the state buffers
+    are donated through the jit (``donate=True``), ``k`` is maintained on
+    device, and the cap schedule is a sticky ladder (the rung that last
+    fit is retried first, and rung 0 is precompiled at construction).
+
+    With ``async_dispatch=True`` the overflow flag of batch t is checked
+    lazily: ``apply_batch(t)`` routes t on the host while the device still
+    crunches batch t-1, resolves t-1 (retrying it on the next rung if it
+    overflowed — the gated commit guarantees the pre-batch values
+    survived), then dispatches t and returns the *previous* batch's
+    affected ids; ``flush()`` drains the pipeline.
     """
 
     def __init__(self, workload: Workload, params: list[dict],
-                 graph: DynamicGraph, state_np, *, min_bucket: int = 64):
+                 graph: DynamicGraph, state_np, *, min_bucket: int = 64,
+                 donate: bool = True, use_pallas: bool = False,
+                 async_dispatch: bool = False, debug_checks: bool = False,
+                 warm: bool = True):
         from repro.utils import next_bucket
         self._next_bucket = next_bucket
         self.workload = workload
         self.params = [{k: jnp.asarray(v) for k, v in p.items()} for p in params]
         self.graph = graph
         self.n = graph.n
+        self.monotonic = not workload.agg.invertible
         self.state = DeviceState(
             H=tuple(jnp.asarray(h) for h in state_np.H),
             S=tuple(jnp.asarray(s) for s in state_np.S),
@@ -403,13 +714,122 @@ class DeviceEngine:
             C=tuple(jnp.asarray(c, dtype=jnp.int32) for c in state_np.C)
             if state_np.C is not None else ())
         self.min_bucket = min_bucket
+        self.donate = donate
+        self.use_pallas = use_pallas
+        self.async_dispatch = async_dispatch
+        self.debug_checks = debug_checks
+        self.interpret = jax.default_backend() != "tpu"
+        self.out_mirror = DeviceCSRMirror(graph.out)
+        self.in_mirror = DeviceCSRMirror(graph.inn) if self.monotonic else None
+        self._bucket = min_bucket
+        self._rung = 0          # transient retry boost (0 once sizes known)
+        self._hw = None         # per-hop high-water marks [L, 3] (r, e, p)
+        self._notes = 0         # high-water adoptions (settle-phase counter)
+        self.retries = 0        # overflow retries across the stream
+        self._pending = None    # (ovf, final, sizes, stats, batch, caps, k)
+        self._last_affected = np.empty(0, dtype=np.int64)
+        self.last_shrink_events = 0
+        self.last_rows_reaggregated = 0
+        if warm:
+            self._warm()
 
-    def _pad_batch(self, batch) -> BatchDev:
+    # -- cap schedule ------------------------------------------------------
+    _HEADROOM = 1.25  # slack over the high-water mark before bucketing
+
+    def _caps(self, rung: int) -> tuple:
+        """The static bucket capacities at retry rung ``rung``.
+
+        Once a batch has run, the schedule is *adaptive*: each hop's caps
+        are the power-of-two bucket over that hop's high-water needed sizes
+        (reported back by the jitted propagate), so buckets track the
+        stream's actual frontier growth instead of a blind geometric ladder
+        — the caps a batch pays for are within 2.5x of what it uses.  The
+        first batch (and rung escalations when a retry's sizes were
+        truncated) falls back to the geometric schedule.
+        """
+        nb = self._next_bucket
+        e_max = nb(max(self.graph.num_edges, 1)) * 2
+        n_b = nb(self.n)
+        L = self.workload.spec.n_layers
+        scale = 4 ** rung
+        caps = []
+        if self._hw is not None:
+            for l in range(L):
+                r, e, p = (max(int(v * self._HEADROOM), 1) * scale
+                           for v in self._hw[l])
+                cap_l = (min(nb(r, minimum=self.min_bucket), n_b),
+                         min(nb(e, minimum=self.min_bucket), e_max))
+                if self.monotonic:
+                    cap_l += (min(nb(p, minimum=self.min_bucket), e_max),)
+                caps.append(cap_l)
+            return tuple(caps)
+        r = min(nb(self._bucket * scale, minimum=self._bucket), n_b)
+        e = min(nb(4 * r), e_max)
+        rr, ee = r, e
+        for _ in range(L):
+            caps.append((rr, ee, min(ee, e_max)) if self.monotonic
+                        else (rr, ee))
+            rr = min(nb(rr * 4), n_b)
+            ee = min(nb(ee * 4), e_max)
+        return tuple(caps)
+
+    def _bucketed(self, hw: np.ndarray) -> np.ndarray:
+        """Elementwise power-of-two bucket of headroomed high-water marks
+        (the quantity whose changes force a recompile)."""
+        v = np.maximum((hw * self._HEADROOM).astype(np.int64),
+                       self.min_bucket)
+        return 1 << np.ceil(np.log2(v)).astype(np.int64)
+
+    _SETTLE_NOTES = 16  # high-water adoptions before drift-overshoot kicks in
+
+    def _note_sizes(self, sizes) -> None:
+        """Fold one attempt's per-hop needed sizes into the high-water
+        marks (an overflowed attempt's sizes aim the retry directly at
+        fitting caps — no blind escalation).  While the schedule settles,
+        marks adopt the observed sizes plainly (batch-to-batch noise must
+        not inflate the buckets); once settled, a channel that outgrows
+        its bucket gets one extra 2x of headroom so a drifting stream pays
+        at most one recompile per doubling instead of one per crossing."""
+        s = np.asarray(sizes, dtype=np.int64)
+        self._notes += 1
+        if self._hw is None:
+            self._hw = s
+            return
+        grown = np.maximum(self._hw, s)
+        if self._notes > self._SETTLE_NOTES:
+            crossed = self._bucketed(grown) > self._bucketed(self._hw)
+            grown = np.where(crossed, grown * 2, grown)
+        self._hw = grown
+
+    def _sentinel_batch(self) -> BatchDev:
+        n, cap = self.n, self._bucket
+        d0 = int(self.state.H[0].shape[1])
+        return BatchDev(ints=jnp.full((5, cap), n, dtype=jnp.int32),
+                        ws=jnp.zeros((2, cap), dtype=jnp.float32),
+                        feat_val=jnp.zeros((cap, d0), dtype=jnp.float32))
+
+    def _warm(self) -> None:
+        """Precompile the rung-0 cap schedule by propagating a sentinel
+        (all-padding) batch — a bit-exact no-op on the state.  The sentinel
+        must not seed the adaptive high-water marks (its needs are zero),
+        so they are reset afterwards and the first real batch starts from
+        the geometric schedule this warm-up compiled."""
+        self._dispatch(self._sentinel_batch())
+        self._resolve()
+        self._hw = None
+        self._notes = 0
+        self._rung = 0
+
+    # -- routing -----------------------------------------------------------
+    def _route(self, batch):
+        """Apply the batch's topology to the host graph and build the padded
+        device batch + the mirror rows it touched.  Does NOT refresh the
+        mirrors (that happens after the previous batch resolves, so a retry
+        of batch t-1 still sees t-1's adjacency)."""
         from repro.utils import pad_to
         n = self.n
-        d0 = self.state.H[0].shape[1]
+        d0 = int(self.state.H[0].shape[1])
         adds, dels = self.graph.apply_topology(batch.edges)
-        self.state = self.state._replace(k=jnp.asarray(self.graph.in_degree))
         fa = np.array([f.vertex for f in batch.features], dtype=np.int32)
         fx = (np.stack([f.value for f in batch.features]).astype(np.float32)
               if batch.features else np.zeros((0, d0), np.float32))
@@ -417,54 +837,125 @@ class DeviceEngine:
         if fa.size:
             uniq, last = np.unique(fa[::-1], return_index=True)
             fa, fx = uniq.astype(np.int32), fx[::-1][last]
-        cap = max(self.min_bucket,
-                  self._next_bucket(max(len(fa), len(adds), len(dels), 1)))
-        mk = lambda a, fill: jnp.asarray(pad_to(np.asarray(a), cap, fill))
-        return BatchDev(
-            feat_idx=mk(fa, n) if fa.size else jnp.full((cap,), n, jnp.int32),
-            feat_val=jnp.asarray(pad_to(fx, cap)),
-            add_src=mk([e.src for e in adds] or [n], n),
-            add_dst=mk([e.dst for e in adds] or [n], n),
-            add_w=jnp.asarray(pad_to(np.array([e.weight for e in adds] or [0.0],
-                                              np.float32), cap)),
-            del_src=mk([e.src for e in dels] or [n], n),
-            del_dst=mk([e.dst for e in dels] or [n], n),
-            del_w=jnp.asarray(pad_to(np.array([e.weight for e in dels] or [0.0],
-                                              np.float32), cap)))
+        need = max(len(fa), len(adds), len(dels), 1)
+        if need > self._bucket:
+            self._bucket = self._next_bucket(need, minimum=self.min_bucket)
+        cap = self._bucket
+        ints = np.full((5, cap), n, dtype=np.int32)
+        ws = np.zeros((2, cap), dtype=np.float32)
+        ints[0, :fa.size] = fa
+        for row, vals in ((1, [e.src for e in adds]),
+                          (2, [e.dst for e in adds]),
+                          (3, [e.src for e in dels]),
+                          (4, [e.dst for e in dels])):
+            ints[row, :len(vals)] = vals
+        ws[0, :len(adds)] = [e.weight for e in adds]
+        ws[1, :len(dels)] = [e.weight for e in dels]
+        dev_batch = BatchDev(ints=jnp.asarray(ints), ws=jnp.asarray(ws),
+                             feat_val=jnp.asarray(pad_to(fx, cap)))
+        touched = adds + dels
+        out_rows = np.unique(np.array([e.src for e in touched], np.int64)) \
+            if touched else np.empty(0, np.int64)
+        in_rows = np.unique(np.array([e.dst for e in touched], np.int64)) \
+            if touched and self.monotonic else np.empty(0, np.int64)
+        return dev_batch, out_rows, in_rows
 
-    def apply_batch(self, batch) -> np.ndarray:
-        """Returns final-hop affected vertex ids."""
-        monotonic = not self.workload.agg.invertible
-        dev_batch = self._pad_batch(batch)
-        csr = DeviceCSR.from_graph(self.graph)
-        in_csr = DeviceCSR.from_half(self.graph.inn) if monotonic else None
-        L = self.workload.spec.n_layers
-        e_max = self._next_bucket(max(self.graph.num_edges, 1)) * 2
-        r = max(self.min_bucket, int(dev_batch.feat_idx.shape[0]))
-        e = 4 * r
-        while True:
-            caps = []
-            rr, ee = r, e
-            for _ in range(L):
-                caps.append((rr, ee, min(ee, e_max)) if monotonic
-                            else (rr, ee))
-                rr = min(self._next_bucket(rr * 4), self._next_bucket(self.n))
-                ee = min(self._next_bucket(ee * 4), e_max)
-            if monotonic:
-                new_state, final, overflow = propagate_monotonic(
-                    self.workload, self.n, tuple(caps), self.params,
-                    self.state, csr, in_csr, dev_batch)
+    # -- dispatch / resolve ------------------------------------------------
+    def _run(self, dev_batch: BatchDev, caps: tuple):
+        if self.monotonic:
+            fn = propagate_monotonic_donated if self.donate \
+                else propagate_monotonic
+            return fn(self.workload, self.n, caps, self.params, self.state,
+                      self.out_mirror.device(), self.in_mirror.device(),
+                      dev_batch, pallas=self.use_pallas,
+                      interpret=self.interpret)
+        fn = propagate_donated if self.donate else propagate
+        new_state, final, overflow, sizes = fn(
+            self.workload, self.n, caps, self.params, self.state,
+            self.out_mirror.device(), dev_batch, pallas=self.use_pallas,
+            interpret=self.interpret)
+        return new_state, final, overflow, sizes, None
+
+    def _dispatch(self, dev_batch: BatchDev) -> None:
+        assert self._pending is None
+        caps = self._caps(self._rung)
+        new_state, final, overflow, sizes, stats = self._run(dev_batch, caps)
+        # optimistic commit: on overflow the gated writes all dropped, so
+        # these buffers hold the pre-batch values and the retry is safe
+        self.state = new_state
+        k_check = self.graph.in_degree.copy() if self.debug_checks else None
+        self._pending = (overflow, final, sizes, stats, dev_batch, caps,
+                         k_check)
+
+    def _resolve(self) -> np.ndarray:
+        """Lazily check the in-flight batch's overflow flag, retrying it
+        with fitting caps if needed; returns its affected vertex ids."""
+        if self._pending is None:
+            return self._last_affected
+        overflow, final, sizes, stats, dev_batch, caps, k_check = \
+            self._pending
+        while bool(overflow):
+            self.retries += 1
+            # the failed attempt reported what it actually needed; aim the
+            # retry straight at fitting caps (truncated attempts may still
+            # under-report downstream hops — the rung fallback guarantees
+            # progress, and each retry fixes at least the first short cap)
+            self._note_sizes(sizes)
+            new_caps = self._caps(0)
+            if new_caps == caps:
+                self._rung += 1
+                new_caps = self._caps(self._rung)
+                if new_caps == caps:
+                    # leave the engine diagnosable: the batch is lost but
+                    # the state still holds the pre-batch values
+                    self._pending = None
+                    raise RuntimeError("bucket ladder saturated while still "
+                                       "overflowing — graph inconsistency?")
             else:
-                new_state, final, overflow = propagate(
-                    self.workload, self.n, tuple(caps), self.params,
-                    self.state, csr, dev_batch)
-            if not bool(overflow):
-                self.state = new_state
-                f = np.asarray(final)
-                return f[f < self.n]
-            r = self._next_bucket(r * 4)
-            e = self._next_bucket(e * 4)
+                self._rung = 0
+            new_state, final, overflow, sizes, stats = self._run(dev_batch,
+                                                                 new_caps)
+            caps = new_caps
+            self.state = new_state
+        self._note_sizes(sizes)
+        self._rung = 0
+        f = np.asarray(final)
+        self._last_affected = f[f < self.n].astype(np.int64)
+        if stats is not None:
+            s = np.asarray(stats)
+            self.last_shrink_events = int(s[0])
+            self.last_rows_reaggregated = int(s[1])
+        if k_check is not None:
+            np.testing.assert_allclose(np.asarray(self.state.k), k_check,
+                                       err_msg="device k drifted from host "
+                                               "in-degree")
+        self._pending = None
+        return self._last_affected
+
+    # -- main entry --------------------------------------------------------
+    def apply_batch(self, batch) -> np.ndarray:
+        """Apply one routed batch; returns final-hop affected vertex ids.
+
+        Synchronous by default.  With ``async_dispatch`` the host routing
+        of this batch overlaps the device compute of the previous one and
+        the return value is the *previous* batch's affected ids (one batch
+        of pipeline latency; ``flush()``/``sync`` drain exactly).
+        """
+        dev_batch, out_rows, in_rows = self._route(batch)
+        prev_affected = self._resolve()
+        self.out_mirror.refresh_rows(out_rows)
+        if self.in_mirror is not None:
+            self.in_mirror.refresh_rows(in_rows)
+        self._dispatch(dev_batch)
+        if self.async_dispatch:
+            return prev_affected
+        return self._resolve()
+
+    def flush(self) -> np.ndarray:
+        """Drain the pipeline (resolve any in-flight batch)."""
+        return self._resolve()
 
     # -- test helpers -----------------------------------------------------
     def host_H(self) -> list[np.ndarray]:
-        return [np.asarray(h) for h in self.state.H]
+        self._resolve()
+        return [np.array(h) for h in self.state.H]

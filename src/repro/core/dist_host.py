@@ -35,13 +35,11 @@ import jax.numpy as jnp
 from repro.utils import next_bucket
 from .distributed import (DistBatch, DistCSR, make_monotonic_propagate,
                           make_rc_propagate, make_ripple_propagate)
-from .graph import DynamicGraph, UpdateBatch, flat_row_indices
+from .graph import _GROW, _MIN_SLACK, DynamicGraph, UpdateBatch, \
+    flat_row_indices
 from .partition import Partitioning, ldg_partition
 from .state import InferenceState
 from .workloads import Workload
-
-_GROW = 1.5  # per-row slack growth factor on rebuild
-_MIN_SLACK = 4
 
 
 class PartitionedCSR:
@@ -172,6 +170,8 @@ class DistEngine:
         self._fn_cache: dict = {}
         self.last_comm = None  # per-hop exchanged slot counts (paper fig12c)
         self.last_host_seconds = 0.0   # routing + CSR maintenance per batch
+        self.last_shrink_events = 0       # monotonic: SHRINK messages
+        self.last_rows_reaggregated = 0   # monotonic: rows re-aggregated
 
     # -- layout transforms -------------------------------------------------
     def _scatter(self, arr: np.ndarray) -> jax.Array:
@@ -329,9 +329,9 @@ class DistEngine:
                         halo, pull, data_axes=self.data_axes)
             fn = self._fn_cache[key]
             if self.monotonic:
-                H, S, C, final, ovf, comm = fn(self.params, self.H, self.S,
-                                               self.C, k, out_csr, in_csr,
-                                               dist_batch)
+                H, S, C, final, ovf, comm, sstats = fn(
+                    self.params, self.H, self.S, self.C, k, out_csr, in_csr,
+                    dist_batch)
             elif self.mode == "ripple":
                 H, S, final, ovf, comm = fn(self.params, self.H, self.S, k,
                                             out_csr, dist_batch)
@@ -343,6 +343,9 @@ class DistEngine:
                 self.H, self.S = H, S
                 if self.monotonic:
                     self.C = C
+                    s = np.asarray(sstats)
+                    self.last_shrink_events = int(s[0])
+                    self.last_rows_reaggregated = int(s[1])
                 self.last_comm = np.asarray(comm)
                 f = np.asarray(final).reshape(-1)
                 offs = np.repeat(np.arange(self.n_parts) * self.n_local,

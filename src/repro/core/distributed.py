@@ -35,6 +35,7 @@ from repro.utils import shard_map_compat
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from .aggregators import jnp_segment_extremum
 from .device_engine import _compact_mailbox
 from .graph import DynamicGraph
 from .partition import Partitioning, ldg_partition
@@ -360,7 +361,6 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
     agg = workload.agg
     sign = agg.sign
     L = spec.n_layers
-    NEG = jnp.float32(-jnp.inf)
 
     def local_fn(params, H, S, C, k, out_csr: DistCSR, in_csr: DistCSR,
                  batch: DistBatch):
@@ -381,6 +381,8 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
         frontier = fv if rc else jnp.where(changed0, fv, n_local)
         overflow = jnp.zeros((), bool)
         comm = []
+        n_shrink = jnp.zeros((), jnp.int32)   # SHRINK-classified messages
+        n_reagg = jnp.zeros((), jnp.int32)    # rows re-aggregated
 
         for l in range(L):
             r_cap, e_cap = caps[l]
@@ -475,33 +477,27 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
             comm.append(jax.lax.psum(halo_remote, dax))
             comm.append(2 * comm_req)
 
-            pv = jnp.where(pvalid[:, None], sign * got, NEG)
             pseg = jnp.where(pvalid, pfid, r_cap)
-            S_sh = jax.ops.segment_max(pv, pseg, num_segments=r_cap + 1)[:r_cap]
-            win_p = (pv == S_sh[pfid]) & pvalid[:, None]
-            C_sh = jax.ops.segment_max(
-                jnp.where(win_p, psrc_g[:, None], -1), pseg,
-                num_segments=r_cap + 1)[:r_cap]
-            C_sh = jnp.maximum(C_sh, -1)
+            S_sh, C_sh = jnp_segment_extremum(agg, got, pseg, r_cap, psrc_g)
 
-            base_S = jnp.where(row_shrink[:, None], S_sh,
-                               sign * S[l + 1][aff_c])
+            base_S = jnp.where(row_shrink[:, None], S_sh, S[l + 1][aff_c])
             base_C = jnp.where(row_shrink[:, None], C_sh, C[l + 1][aff_c])
 
             # ---- GROW: fold candidates in --------------------------------
             is_cand = rvalid & ~rdel
-            cv = jnp.where(is_cand[:, None], rval_ms, NEG)
             cslot = jnp.where(is_cand, slot, r_cap)
-            S_cand = jax.ops.segment_max(cv, cslot,
-                                         num_segments=r_cap + 1)[:r_cap]
-            S_ms = jnp.maximum(base_S, S_cand)
-            win_c = (cv == S_ms[jnp.minimum(cslot, r_cap - 1)]) \
-                & is_cand[:, None]
-            C_cand = jax.ops.segment_max(
-                jnp.where(win_c, rsrc_g[:, None], -1), cslot,
-                num_segments=r_cap + 1)[:r_cap]
-            C_new = jnp.where(C_cand >= 0, C_cand, base_C)
-            S_new = sign * S_ms
+            S_new, C_new = jnp_segment_extremum(
+                agg, rpay[:, :d_loc], cslot, r_cap, rsrc_g,
+                base=base_S, base_refs=base_C)
+
+            # shrink accounting (bench stats): a message SHRINKs when ANY
+            # of its full-d dims (spread over the model shards) lost its
+            # covering contribution; rows re-aggregate model-consistently
+            shrink_full = jax.lax.psum(shrink_msg.astype(jnp.float32),
+                                       "model") > 0
+            n_shrink = n_shrink + shrink_full.sum().astype(jnp.int32)
+            n_reagg = n_reagg + (row_shrink & (rec_idx < n_local)
+                                 ).sum().astype(jnp.int32)
 
             # ---- apply + (filtered) propagation --------------------------
             x = agg.normalize(S_new, k[aff_c], xp=jnp)
@@ -519,8 +515,10 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
 
         add_back = lambda t: jax.tree.map(lambda a: a[None], t)
         ovf_g = jax.lax.psum(overflow.astype(jnp.float32), dax)
+        shrink_stats = jax.lax.psum(
+            jnp.stack([n_shrink, n_reagg]).astype(jnp.float32), dax)
         return (add_back(H), add_back(S), add_back(C), add_back(frontier),
-                ovf_g, jnp.stack(comm))
+                ovf_g, jnp.stack(comm), shrink_stats)
 
     state_spec_h = tuple(P(dax, None, "model") for _ in range(L + 1))
     state_spec_s = (P(dax, None),) + tuple(P(dax, None, "model")
@@ -536,7 +534,7 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
         in_specs=(tp_param_specs(workload), state_spec_h, state_spec_s,
                   state_spec_s, P(dax, None), csr_spec, csr_spec, batch_spec),
         out_specs=(state_spec_h, state_spec_s, state_spec_s, P(dax, None),
-                   P(), P()),
+                   P(), P(), P()),
         check_vma=False)
     return jax.jit(fn)
 

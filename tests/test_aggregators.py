@@ -242,6 +242,53 @@ def test_np_segment_extremum_witnesses():
         np.testing.assert_array_equal(vals[C[r] - 100, np.arange(4)], S[r])
 
 
+@pytest.mark.parametrize("agg", [MAX, MIN])
+def test_jnp_segment_extremum_matches_np(agg):
+    """The jitted engines' segment-extremum-with-witness helper is the same
+    contract as the host binding — identical S, and witnesses that attain
+    it (tie-breaks may differ; any witness is valid)."""
+    import jax.numpy as jnp
+    from repro.core.aggregators import jnp_segment_extremum
+
+    rng = np.random.default_rng(3)
+    n_rows, d, E = 6, 4, 20
+    vals = rng.normal(size=(E, d)).astype(np.float32)
+    seg = rng.integers(0, n_rows + 1, size=E)  # n_rows = padding lanes
+    src = rng.integers(0, 50, size=E)
+    valid = seg < n_rows
+    S_np, C_np = np_segment_extremum(agg, vals[valid], seg[valid], n_rows,
+                                     src[valid])
+    S_j, C_j = jnp_segment_extremum(agg, jnp.asarray(vals),
+                                    jnp.asarray(seg), n_rows,
+                                    jnp.asarray(src))
+    np.testing.assert_array_equal(np.asarray(S_j), S_np)
+    C_j = np.asarray(C_j)
+    assert np.array_equal(C_j == -1, C_np == -1)  # same empty dims
+    for r in range(n_rows):  # every witness must attain the extremum
+        for dd in range(d):
+            if C_j[r, dd] < 0:
+                continue
+            hit = (seg == r) & (src == C_j[r, dd])
+            assert np.any(vals[hit][:, dd] == S_np[r, dd])
+
+    # base folding: covered candidates must yield no witness; dims the
+    # base wins keep the base refs (both bindings agree)
+    base = rng.normal(size=(n_rows, d)).astype(np.float32)
+    base_refs = rng.integers(0, 50, size=(n_rows, d)).astype(np.int32)
+    S_np2, C_np2 = np_segment_extremum(agg, vals[valid], seg[valid], n_rows,
+                                       src[valid], base=base,
+                                       base_refs=base_refs)
+    S_j2, C_j2 = jnp_segment_extremum(agg, jnp.asarray(vals),
+                                      jnp.asarray(seg), n_rows,
+                                      jnp.asarray(src), base=jnp.asarray(base),
+                                      base_refs=jnp.asarray(base_refs))
+    np.testing.assert_array_equal(np.asarray(S_j2), S_np2)
+    np.testing.assert_array_equal(agg.ufunc(S_np2, base), S_np2)
+    base_wins = agg.improves(base, S_np) | ~np.isfinite(S_np)
+    np.testing.assert_array_equal(np.asarray(C_j2)[base_wins],
+                                  base_refs[base_wins])
+
+
 def test_stream_mix_and_skew():
     s = _build("gc-s", "ripple", n=200, m=1200)
     stream = list(s.make_stream(300, seed=0, mix=(0, 3, 1), skew=1.5))

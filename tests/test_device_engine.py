@@ -70,6 +70,175 @@ def test_overflow_retry_small_buckets():
         FeatureUpdate(int(v), rng.normal(size=8).astype(np.float32))
         for v in rng.choice(g.n, size=20, replace=False)])
     eng.apply_batch(batch)
+    assert eng.retries > 0  # the tiny buckets must actually have overflowed
+    H_ref = _oracle_H(wl, params, g, eng.host_H()[0])
+    for h, href in zip(eng.host_H(), H_ref):
+        np.testing.assert_allclose(h, href, atol=ATOL, rtol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# PR 4: device-resident pipeline (persistent mirror, donation, pallas, async)
+# ---------------------------------------------------------------------------
+def _stream(g, rng, n_batches=6, d0=8):
+    batches = []
+    for _ in range(n_batches):
+        b = UpdateBatch()
+        for _ in range(4):
+            u, v = int(rng.integers(0, g.n)), int(rng.integers(0, g.n))
+            if u != v:
+                b.edges.append(EdgeUpdate(u, v, not g.has_edge(u, v),
+                                          float(rng.uniform(0.2, 1.0))))
+        b.features.append(FeatureUpdate(
+            int(rng.integers(0, g.n)), rng.normal(size=d0).astype(np.float32)))
+        batches.append(b)
+    return batches
+
+
+def test_mirror_single_upload_across_stream():
+    """The CSR mirror uploads the full pool exactly once; every batch after
+    is touched-row refreshes only (no O(E) host->device transfer)."""
+    wl, g, params, state = _setup("gs-max")
+    eng = DeviceEngine(wl, params, g, state, min_bucket=16)
+    rng = np.random.default_rng(5)
+    for b in _stream(g, rng, n_batches=8):
+        eng.apply_batch(b)
+    for mirror in (eng.out_mirror, eng.in_mirror):
+        assert mirror.uploads == 1, "pool re-uploaded mid-stream"
+        assert mirror.rebuilds == 0
+        assert mirror.row_refreshes > 0
+    # and the state is still oracle-exact after all those refreshes
+    H_ref = _oracle_H(wl, params, g, eng.host_H()[0])
+    for h, href in zip(eng.host_H(), H_ref):
+        np.testing.assert_allclose(h, href, atol=ATOL, rtol=ATOL)
+
+
+def test_mirror_rebuild_on_slack_overflow():
+    """Concentrated appends outgrow one row's slack; the mirror must do a
+    full rebuild and stay consistent with the host adjacency."""
+    wl, g, params, state = _setup("gc-s")
+    eng = DeviceEngine(wl, params, g, state, min_bucket=16)
+    hot = 0
+    batch = UpdateBatch(edges=[
+        EdgeUpdate(hot, v, True, 1.0) for v in range(1, 40)
+        if not g.has_edge(hot, v)])
+    eng.apply_batch(batch)
+    assert eng.out_mirror.rebuilds >= 1, "slack overflow did not rebuild"
+    # device pool content must equal the host half row-for-row
+    m = eng.out_mirror
+    col = np.asarray(m.col)
+    start = np.asarray(m.start)
+    length = np.asarray(m.length)
+    for v in range(g.n):
+        dev_row = np.sort(col[start[v]: start[v] + length[v]])
+        host_row = np.sort(g.out.row(v)[0])
+        np.testing.assert_array_equal(dev_row, host_row, err_msg=f"row {v}")
+    H_ref = _oracle_H(wl, params, g, eng.host_H()[0])
+    for h, href in zip(eng.host_H(), H_ref):
+        np.testing.assert_allclose(h, href, atol=ATOL, rtol=ATOL)
+
+
+@pytest.mark.parametrize("name", ["gc-s", "gs-max"])
+def test_overflow_commits_nothing(name):
+    """An overflowing attempt must leave the (donated) state bit-identical
+    — the gated-commit contract behind the lazy ladder retry."""
+    from repro.core.device_engine import (propagate_donated,
+                                          propagate_monotonic_donated)
+    wl, g, params, state = _setup(name, n=64, m=700)
+    eng = DeviceEngine(wl, params, g, state, min_bucket=16, warm=False)
+    rng = np.random.default_rng(0)
+    batch = UpdateBatch(features=[
+        FeatureUpdate(int(v), rng.normal(size=8).astype(np.float32))
+        for v in rng.choice(g.n, size=16, replace=False)])
+    dev_batch, out_rows, in_rows = eng._route(batch)
+    before = {"H": eng.host_H(), "S": [np.array(s) for s in eng.state.S],
+              "k": np.array(eng.state.k)}
+    caps = ((4, 4, 4), (4, 4, 4)) if eng.monotonic else ((4, 4), (4, 4))
+    if eng.monotonic:
+        new_state, final, ovf, sizes, _stats = propagate_monotonic_donated(
+            wl, eng.n, caps, eng.params, eng.state,
+            eng.out_mirror.device(), eng.in_mirror.device(), dev_batch)
+    else:
+        new_state, final, ovf, sizes = propagate_donated(
+            wl, eng.n, caps, eng.params, eng.state,
+            eng.out_mirror.device(), dev_batch)
+    assert bool(ovf), "tiny caps should overflow"
+    for l, h in enumerate(new_state.H):
+        np.testing.assert_array_equal(np.asarray(h), before["H"][l])
+    for l, s in enumerate(new_state.S):
+        np.testing.assert_array_equal(np.asarray(s), before["S"][l])
+    np.testing.assert_array_equal(np.asarray(new_state.k), before["k"])
+    assert np.all(np.asarray(final) == eng.n)  # no affected rows reported
+
+
+@pytest.mark.parametrize("name", WORKLOAD_NAMES)
+def test_donated_path_matches_fresh_nondonated(name):
+    """Donated-buffer (in-place) propagation must match a fresh non-donated
+    engine on the same stream — all 7 workloads."""
+    wl, g, params, state = _setup(name)
+    wl2, g2, params2, state2 = _setup(name)
+    don = DeviceEngine(wl, params, g, state, min_bucket=16, donate=True)
+    ref = DeviceEngine(wl2, params2, g2, state2, min_bucket=16, donate=False)
+    r1, r2 = np.random.default_rng(9), np.random.default_rng(9)
+    for b1, b2 in zip(_stream(g, r1), _stream(g2, r2)):
+        a1 = don.apply_batch(b1)
+        a2 = ref.apply_batch(b2)
+        np.testing.assert_array_equal(a1, a2)
+    for l, (h1, h2) in enumerate(zip(don.host_H(), ref.host_H())):
+        np.testing.assert_allclose(h1, h2, atol=1e-6, rtol=1e-6,
+                                   err_msg=f"{name} layer {l}")
+
+
+@pytest.mark.parametrize("name", ["gc-s", "gc-m", "gs-s", "gc-min", "gs-max"])
+def test_pallas_hop_apply_matches_jnp(name):
+    """The fused Pallas hop-apply (interpret mode off-TPU) must match the
+    jnp oracle path for both algebra families."""
+    wl, g, params, state = _setup(name)
+    wl2, g2, params2, state2 = _setup(name)
+    pal = DeviceEngine(wl, params, g, state, min_bucket=16, use_pallas=True)
+    ref = DeviceEngine(wl2, params2, g2, state2, min_bucket=16)
+    r1, r2 = np.random.default_rng(11), np.random.default_rng(11)
+    for b1, b2 in zip(_stream(g, r1, n_batches=4), _stream(g2, r2, n_batches=4)):
+        pal.apply_batch(b1)
+        ref.apply_batch(b2)
+    for l, (h1, h2) in enumerate(zip(pal.host_H(), ref.host_H())):
+        np.testing.assert_allclose(h1, h2, atol=1e-4, rtol=1e-4,
+                                   err_msg=f"{name} layer {l}")
+    H_ref = _oracle_H(wl, params, g, pal.host_H()[0])
+    for h, href in zip(pal.host_H(), H_ref):
+        np.testing.assert_allclose(h, href, atol=ATOL, rtol=ATOL)
+
+
+@pytest.mark.parametrize("name", ["gc-s", "gs-max"])
+def test_async_dispatch_pipeline_equivalence(name):
+    """Pipelined dispatch (lazy overflow check) must drain to the same
+    state as the synchronous engine; k stays consistent on device."""
+    wl, g, params, state = _setup(name)
+    wl2, g2, params2, state2 = _setup(name)
+    asy = DeviceEngine(wl, params, g, state, min_bucket=16,
+                       async_dispatch=True, debug_checks=True)
+    ref = DeviceEngine(wl2, params2, g2, state2, min_bucket=16)
+    r1, r2 = np.random.default_rng(13), np.random.default_rng(13)
+    for b1, b2 in zip(_stream(g, r1), _stream(g2, r2)):
+        asy.apply_batch(b1)
+        ref.apply_batch(b2)
+    asy.flush()
+    np.testing.assert_allclose(np.array(asy.state.k), g.in_degree)
+    for l, (h1, h2) in enumerate(zip(asy.host_H(), ref.host_H())):
+        np.testing.assert_allclose(h1, h2, atol=1e-6, rtol=1e-6,
+                                   err_msg=f"{name} layer {l}")
+
+
+def test_device_k_maintained_without_host_reupload():
+    """The in-degree vector is maintained on device from the batch's
+    add/delete counts — it must track the host graph exactly through a
+    mixed add/delete stream (debug_checks asserts per batch)."""
+    wl, g, params, state = _setup("gc-m")  # mean: k actually normalizes
+    eng = DeviceEngine(wl, params, g, state, min_bucket=16,
+                       debug_checks=True)
+    rng = np.random.default_rng(17)
+    for b in _stream(g, rng, n_batches=8):
+        eng.apply_batch(b)
+    np.testing.assert_allclose(np.array(eng.state.k), g.in_degree)
     H_ref = _oracle_H(wl, params, g, eng.host_H()[0])
     for h, href in zip(eng.host_H(), H_ref):
         np.testing.assert_allclose(h, href, atol=ATOL, rtol=ATOL)
