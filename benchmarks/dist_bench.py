@@ -38,7 +38,8 @@ def run(parts: int, mode: str, n=1500, m=30000, batch=100, n_updates=600,
     stream = session.make_stream(n_updates, seed=1, mix=mix)
 
     monotonic = session.workload.spec.monotonic
-    comm, pulls, lat, host, shrinks, reaggs = [], [], [], [], [], []
+    comm, pull_req, pull_resp, lat, host = [], [], [], [], []
+    shrinks, reaggs, dims, recovers = [], [], [], []
     first = True
     for b in stream.batches(batch):
         rep = session.ingest(b)
@@ -46,11 +47,16 @@ def run(parts: int, mode: str, n=1500, m=30000, batch=100, n_updates=600,
             lat.append(rep.latencies[0])
             slots = rep.results[0].messages_per_hop
             comm.append(sum(slots))
-            # monotonic comm interleaves [halo, pull] per hop; the pull
-            # slots carry the SHRINK-only vs pull-everything contrast
-            pulls.append(sum(slots[1::2]) if monotonic else 0)
+            # monotonic comm interleaves [halo, pull_req, pull_resp] per
+            # hop; the pull split carries the SHRINK-only dim-masked vs
+            # pull-everything row-sized contrast (resp units are scalars:
+            # 1 per request for per-dim RIPPLE, d_loc per request for RC)
+            pull_req.append(sum(slots[1::3]) if monotonic else 0)
+            pull_resp.append(sum(slots[2::3]) if monotonic else 0)
             shrinks.append(rep.results[0].shrink_events)
             reaggs.append(rep.results[0].rows_reaggregated)
+            dims.append(rep.results[0].dims_reaggregated)
+            recovers.append(rep.results[0].recover_hits)
             host.append(session.engine.impl.last_host_seconds)
         first = False
     thr = n_updates / max(sum(lat), 1e-9)
@@ -64,9 +70,13 @@ def run(parts: int, mode: str, n=1500, m=30000, batch=100, n_updates=600,
             "median_latency_s": float(np.median(lat)),
             "updates_per_sec": float(thr),
             "mean_comm_slots": float(np.mean(comm)),
-            "mean_pull_slots": float(np.mean(pulls)),
+            "mean_pull_slots": float(np.mean(pull_req) + np.mean(pull_resp)),
+            "mean_pull_req_slots": float(np.mean(pull_req)),
+            "mean_pull_resp_units": float(np.mean(pull_resp)),
             "shrink_events_per_batch": float(np.mean(shrinks)),
             "rows_reaggregated_per_batch": float(np.mean(reaggs)),
+            "shrink_dims_per_batch": float(np.mean(dims)),
+            "recover_hits_per_batch": float(np.mean(recovers)),
             "median_host_seconds": float(np.median(host)),
             "csr_rebuilds": int(csr.rebuilds),
             "csr_row_refreshes": int(csr.row_refreshes)}
@@ -103,9 +113,13 @@ def main():
         / max(mono[0]["mean_comm_slots"], 1e-9)
     pull_ratio = mono[1]["mean_pull_slots"] \
         / max(mono[0]["mean_pull_slots"], 1e-9)
+    # the per-dim payoff in isolation: response payload scalars (RC ships
+    # d_loc-wide rows per request, RIPPLE one scalar per shrunk-dim pull)
+    resp_ratio = mono[1]["mean_pull_resp_units"] \
+        / max(mono[0]["mean_pull_resp_units"], 1e-9)
     print(f"fig12/comm-reduction/gc-min-p4,0.0,"
-          f"rc_over_rp={mono_ratio:.1f}x pull_rc_over_rp={pull_ratio:.1f}x",
-          flush=True)
+          f"rc_over_rp={mono_ratio:.1f}x pull_rc_over_rp={pull_ratio:.1f}x "
+          f"resp_rc_over_rp={resp_ratio:.1f}x", flush=True)
     with open(OUT_PATH, "w") as f:
         json.dump({"bench": "dist", "workload": "gc-s", "n": 1500,
                    "m": 30000, "batch": 100, "n_updates": 600, "d": D,
@@ -115,7 +129,9 @@ def main():
                                  "batch": 20, "n_updates": 300,
                                  "mix": [1, 3, 1], "results": mono,
                                  "comm_reduction_rc_over_rp": mono_ratio,
-                                 "pull_reduction_rc_over_rp": pull_ratio}},
+                                 "pull_reduction_rc_over_rp": pull_ratio,
+                                 "pull_resp_reduction_rc_over_rp":
+                                     resp_ratio}},
                   f, indent=2)
     print(f"wrote {os.path.relpath(OUT_PATH)}", flush=True)
 

@@ -81,7 +81,9 @@ class _HostAdapter:
                             messages_per_hop=s.messages_per_hop,
                             numeric_ops=s.numeric_ops,
                             shrink_events=s.shrink_events,
-                            rows_reaggregated=s.rows_reaggregated)
+                            rows_reaggregated=s.rows_reaggregated,
+                            dims_reaggregated=s.dims_reaggregated,
+                            recover_hits=s.recover_hits)
 
     def sync(self) -> InferenceState:
         return self._impl.state
@@ -158,7 +160,9 @@ class DeviceAdapter:
                             wall_seconds=time.perf_counter() - t0,
                             affected_per_hop=[int(affected.size)],
                             shrink_events=self._impl.last_shrink_events,
-                            rows_reaggregated=self._impl.last_rows_reaggregated)
+                            rows_reaggregated=self._impl.last_rows_reaggregated,
+                            dims_reaggregated=self._impl.last_dims_reaggregated,
+                            recover_hits=self._impl.last_recover_hits)
 
     def flush(self) -> None:
         """Drain the async pipeline (no-op when synchronous)."""
@@ -323,7 +327,9 @@ class DistAdapter:
             wall_seconds=time.perf_counter() - t0,
             messages_per_hop=[int(c) for c in self._impl.last_comm],
             shrink_events=self._impl.last_shrink_events,
-            rows_reaggregated=self._impl.last_rows_reaggregated)
+            rows_reaggregated=self._impl.last_rows_reaggregated,
+            dims_reaggregated=self._impl.last_dims_reaggregated,
+            recover_hits=self._impl.last_recover_hits)
 
     def sync(self) -> InferenceState:
         return self._impl.gather_state(self._host)

@@ -61,7 +61,10 @@ class UpdateResult:
     messages_per_hop: list[int] = field(default_factory=list)
     numeric_ops: int = 0
     shrink_events: int = 0      # monotonic aggregators: SHRINK messages
-    rows_reaggregated: int = 0  # monotonic aggregators: rows re-aggregated
+    rows_reaggregated: int = 0  # monotonic: rows with >=1 re-aggregated dim
+    dims_reaggregated: int = 0  # monotonic: (row, dim) cells gathered
+    recover_hits: int = 0       # monotonic: shrunk dims the re-cover probe
+    #                             re-witnessed without touching the CSR
 
     @property
     def total_affected(self) -> int:

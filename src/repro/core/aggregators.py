@@ -33,11 +33,28 @@ Every incoming message is then classified:
             changed* (filtered propagation: covered candidates stop dead).
     SHRINK  a covering contribution went away — the edge from the
             contributor was deleted, or the contributor's value moved
-            strictly away from the extremum.  The extremum for that row is
-            no longer witnessed, so the engine **re-aggregates exactly that
-            row** over its current in-neighborhood (the
-            recompute-on-covered-removal fallback).  A re-aggregation that
-            reproduces the old value yields a zero delta and the wave stops.
+            strictly away from the extremum.  The extremum is no longer
+            witnessed **in that dimension**, so the engine re-aggregates
+            exactly the shrunk ``(vertex, dim)`` cells over the vertex's
+            current in-neighborhood (the recompute-on-covered-removal
+            fallback, at per-dim granularity — one SHRINK event never
+            forces a full-row gather).  A re-aggregation that reproduces
+            the old value yields a zero delta and the wave stops.
+
+Two refinements keep SHRINK cost proportional to what actually changed:
+
+    * **per-dim masks** — classification yields a ``(row, dim)`` mask, and
+      the segment-extremum helpers below accept pair-flattened 1-D values,
+      so re-aggregation gathers only the shrunk columns of in-neighbor
+      embeddings.  A dim shrunk by several messages in one batch coalesces
+      into one mask cell and is re-derived once (batch-level dedup for
+      free).
+    * **the re-cover probe** — before touching the CSR at all, compare the
+      shrunk dims against the batch's surviving GROW candidates: if some
+      candidate value ties-or-beats the stored extremum in a shrunk dim,
+      that candidate re-witnesses the dim (every other surviving
+      in-neighbor is bounded by the old extremum), so the GROW fold alone
+      re-establishes the invariant and no gather happens.
 
 The invariant that makes classification sound: after every batch,
 ``S[l+1][v, d] == H[l][C[l+1][v, d], d]`` for every non-empty row.  GROW
@@ -179,28 +196,37 @@ def np_segment_extremum(agg: MonotonicAgg, vals: np.ndarray, seg: np.ndarray,
     C [n_rows, d])`` with identity / -1 in empty rows.  Contributor
     tie-breaks are arbitrary (any witness is valid).
 
+    ``vals`` may also be 1-D ``[E]`` — the pair-flattened form behind
+    per-dim SHRINK re-aggregation, where each segment is one ``(vertex,
+    dim)`` pair and only that dim's column is ever gathered; the result is
+    then ``(S [n_rows], C [n_rows])``.
+
     With ``base [n_rows, d]`` the segment extremum is folded into an
     existing aggregate and witnesses are taken against the *folded* result,
     so covered candidates yield no witness; dims the base still wins keep
     ``base_refs`` (required with ``base``).  This is the same signature the
     jitted engines consume via :func:`jnp_segment_extremum`.
     """
-    d = vals.shape[1]
-    S = np.full((n_rows, d), agg.identity, dtype=np.float32)
+    shape = (n_rows,) if vals.ndim == 1 else (n_rows, vals.shape[1])
+    S = np.full(shape, agg.identity, dtype=np.float32)
     agg.ufunc.at(S, seg, vals)
     if base is not None:
         S = agg.ufunc(S, base)
-    C = np.full((n_rows, d), -1, dtype=np.int32)
+    C = np.full(shape, -1, dtype=np.int32)
     if vals.shape[0]:
-        jj, dd = np.nonzero(vals == S[seg])
-        C[seg[jj], dd] = src[jj]
+        if vals.ndim == 1:
+            jj = np.nonzero(vals == S[seg])[0]
+            C[seg[jj]] = src[jj]
+        else:
+            jj, dd = np.nonzero(vals == S[seg])
+            C[seg[jj], dd] = src[jj]
     if base_refs is not None:
         C = np.where(C >= 0, C, base_refs)
     return S, C
 
 
 def jnp_segment_extremum(agg: MonotonicAgg, vals, seg, n_rows: int, src, *,
-                         base=None, base_refs=None):
+                         base=None, base_refs=None, small_ids: bool = False):
     """jnp segment min/max with contributor refs (the jitted engines' half
     of the :func:`np_segment_extremum` contract; one signature, two array
     modules).
@@ -210,7 +236,9 @@ def jnp_segment_extremum(agg: MonotonicAgg, vals, seg, n_rows: int, src, *,
     nothing); ``src [E]`` the contributing vertex ids.  All reductions run
     in max-space (``agg.sign * value``) so one body serves max and min.
     Returns ``(S [n_rows, d], C [n_rows, d])`` with ``agg.identity`` / -1
-    in empty rows.
+    in empty rows.  Like the host binding, ``vals`` may be 1-D ``[E]`` —
+    the pair-flattened per-dim SHRINK form, yielding ``(S [n_rows],
+    C [n_rows])``.
 
     With ``base`` the extremum is folded into an existing aggregate
     (``extremum(base, segment_extremum)``) and witnesses are computed
@@ -218,38 +246,48 @@ def jnp_segment_extremum(agg: MonotonicAgg, vals, seg, n_rows: int, src, *,
     witness; dims the base wins keep ``base_refs``.  This is the GROW fold
     used at the device/dist candidate sites; the SHRINK re-aggregation
     sites call it base-less.
+
+    ``small_ids=True`` runs the witness reduction over float32 instead of
+    int32 — exact only while ``src < 2^24`` (float32 integer range), which
+    the distributed path already guarantees for its relabeled id space;
+    XLA CPU's int scatter-max lowering is ~3x slower than the float one,
+    and the witness pass sits on the monotonic hop's critical path.
     """
     import jax
     import jax.numpy as jnp
 
+    lanes = (lambda a: a) if vals.ndim == 1 else (lambda a: a[:, None])
     sign = agg.sign
     vms = sign * vals
     S_ms = jax.ops.segment_max(vms, seg, num_segments=n_rows + 1)[:n_rows]
     if base is not None:
         S_ms = jnp.maximum(S_ms, sign * base)
-    valid = (seg < n_rows)[:, None]
+    valid = lanes(seg < n_rows)
     win = (vms == S_ms[jnp.minimum(seg, n_rows - 1)]) & valid
+    wdtype = jnp.float32 if small_ids else jnp.int32
     C = jnp.maximum(jax.ops.segment_max(
-        jnp.where(win, src[:, None].astype(jnp.int32), -1), seg,
-        num_segments=n_rows + 1)[:n_rows], -1)
+        jnp.where(win, lanes(src).astype(wdtype), -1), seg,
+        num_segments=n_rows + 1)[:n_rows], -1).astype(jnp.int32)
     if base_refs is not None:
         C = jnp.where(C >= 0, C, base_refs)
     return sign * S_ms, C
 
 
-def np_shrink_mask(agg: MonotonicAgg, C_rows: np.ndarray, S_rows: np.ndarray,
+def np_shrink_dims(agg: MonotonicAgg, C_rows: np.ndarray, S_rows: np.ndarray,
                    src: np.ndarray, vals: np.ndarray,
                    is_del: np.ndarray) -> np.ndarray:
-    """Per-message SHRINK classification (GROW is the complement).
+    """Per-(message, dim) SHRINK classification (GROW is the complement).
 
-    A message ``(src -> row)`` shrinks a dim when ``src`` is that dim's
+    A message ``(src -> row)`` shrinks dim ``d`` when ``src`` is that dim's
     tracked contributor and its contribution went away: the edge was
     deleted, or the contributor's new value moved strictly off the stored
-    extremum.  Returns a per-message bool (any dim shrinks).
+    extremum.  Returns the ``[n_messages, d]`` bool mask — the engines
+    scatter-OR it into per-row dim masks so a dim shrunk by several
+    messages re-derives once.
     """
     match = C_rows == src[:, None]
     gone = is_del[:, None] | agg.improves(S_rows, vals)
-    return np.any(match & gone, axis=1)
+    return match & gone
 
 
 def compute_contributors(agg: MonotonicAgg, H: list[np.ndarray],

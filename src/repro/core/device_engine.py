@@ -33,13 +33,17 @@ drops every write, so the returned — possibly aliased — buffers hold the
 pre-batch values bit-exactly and the ladder can retry).
 
 Monotonic workloads (max/min) run through ``propagate_monotonic`` instead:
-candidate extrema compact into per-row segment-max mailboxes, SHRINK rows
-(tracked contributor lost) pull their in-neighborhood from a mirrored
-in-CSR, and the next frontier keeps only rows whose embedding actually
+candidate extrema compact into per-row segment-max mailboxes, SHRINK cells
+(tracked contributor lost, classified per ``(row, dim)``) first face the
+re-cover probe — a candidate that ties-or-beats the lost extremum
+re-witnesses the dim with no pull at all — and the survivors gather
+single columns of the mirrored in-CSR's neighborhoods as pair-flattened
+element reads; the next frontier keeps only rows whose embedding actually
 changed (filtered propagation) — see core/aggregators.py for the algebra.
 With ``pallas=True`` the hop apply runs through the fused Pallas kernels
-(kernels/delta_apply, kernels/extremum_apply) — interpret mode off-TPU,
-real kernels on TPU — with the jnp path kept as the oracle.
+(kernels/delta_apply, kernels/extremum_apply, kernels/mlp_apply for GIN's
+two-matmul MLP) — interpret mode off-TPU, real kernels on TPU — with the
+jnp path kept as the oracle.
 """
 from __future__ import annotations
 
@@ -385,7 +389,17 @@ def _apply_hop(workload: Workload, params_l: dict, layer: int, n: int,
             h_new = h_new + h_prev @ params_l["w_self"]
             if not last:
                 h_new = jnp.maximum(h_new, 0.0)
-    else:  # jnp oracle path (and GIN, whose MLP the kernel can't express)
+    elif pallas and workload.family == "gin":
+        # fused two-matmul MLP apply (kernels/mlp_apply): fold + z-term +
+        # both GIN matmuls in one HBM pass; jnp path stays the oracle
+        from repro.kernels.mlp_apply import mlp_apply
+        mean = getattr(workload.agg, "by_degree", False)
+        S_rows, h_new = mlp_apply(S_base, mailbox, h_prev, k_rows,
+                                  params_l["eps"], params_l["w1"],
+                                  params_l["b1"], params_l["w2"],
+                                  params_l["b2"], mean=mean, relu=not last,
+                                  interpret=interpret)
+    else:  # jnp oracle path
         S_rows = S_base + mailbox
         x = workload.normalize(S_rows, k_rows)
         h_new = workload.update_fn(layer)(params_l, h_prev, x)
@@ -489,6 +503,26 @@ def _ragged_gather(n: int, csr: DeviceCSR, rows: jax.Array, degs: jax.Array,
     return cols, fid, valid, total
 
 
+def _masked_pairs(mask: jax.Array, cap: int, fill_row: int):
+    """Row-major (row, col) indices of the True cells of ``mask``, padded
+    with ``(fill_row, 0)`` to the static ``cap``.
+
+    Semantically ``jnp.nonzero(mask, size=cap, fill_value=(fill_row, 0))``,
+    but lowered as one cumsum + one drop-scatter — XLA CPU's nonzero
+    lowering is ~7x slower at these shapes and was the single hottest op
+    in the per-dim monotonic hop.  Cells beyond ``cap`` are dropped
+    (callers detect that via ``mask.sum() > cap`` overflow checks).
+    """
+    R, D = mask.shape
+    flat = mask.reshape(-1)
+    dest = jnp.where(flat, jnp.cumsum(flat) - 1, cap)
+    lin = jnp.full((cap,), R * D, dtype=jnp.int32).at[dest].set(
+        jnp.arange(R * D, dtype=jnp.int32), mode="drop")
+    hit = lin < R * D
+    return (jnp.where(hit, lin // D, fill_row).astype(jnp.int32),
+            jnp.where(hit, lin % D, 0).astype(jnp.int32))
+
+
 def _expand_frontier_edges(n: int, csr: DeviceCSR, frontier: jax.Array,
                            e_cap: int):
     """Ragged gather of frontier out-edges into a static bucket.
@@ -504,11 +538,25 @@ def _expand_frontier_edges(n: int, csr: DeviceCSR, frontier: jax.Array,
 def _monotonic_hop(workload: Workload, params_l: dict, layer: int, n: int,
                    state: DeviceState, out_csr: DeviceCSR, in_csr: DeviceCSR,
                    batch: BatchDev, frontier: jax.Array, patch,
-                   *, r_cap: int, e_cap: int, p_cap: int,
+                   *, r_cap: int, e_cap: int, p_cap: int, pd_cap: int,
                    pallas: bool, interpret: bool):
     """One GROW/SHRINK hop layer -> layer+1 (reads only); returns the hop
     patch (rec_idx, S_new, C_new, h_new), the filtered next frontier, the
-    overflow flag, and (shrink_events, rows_reaggregated) counters.
+    overflow flag, and the (shrink_events, rows_reaggregated,
+    dims_reaggregated, recover_hits) counters.
+
+    SHRINK runs at per-(row, dim) granularity: classification produces a
+    ``[r_cap, d]`` mask (one cell per shrunk dim, deduped across the
+    batch's messages by the segment-max scatter), the re-cover probe drops
+    every cell the batch's own candidate extremum already re-witnesses,
+    and the survivors re-derive from the in-CSR.  The fetch has two
+    lowerings chosen by static backend: on accelerators the cells are
+    flattened into (row, dim) *pairs* (static cap ``pd_cap``) whose
+    in-neighborhoods are gathered as single-column element reads —
+    ``p_cap`` then bounds pulled elements, not pulled-rows-times-d; under
+    XLA CPU (interpret mode) needy rows are re-derived with vector row
+    gathers instead (``p_cap`` bounds their total in-degree), because the
+    CPU per-lane scatter overhead dwarfs the traffic saved.
 
     All extremum arithmetic runs in max-space (``sign * value``) so one code
     path serves both max and min; the post-update layer-l values are read
@@ -538,61 +586,111 @@ def _monotonic_hop(workload: Workload, params_l: dict, layer: int, n: int,
     rec_idx, pos, n_rec = _unique_recipients(n, all_dst, r_cap)
     overflow |= n_rec > r_cap
     aff_c = jnp.minimum(rec_idx, n - 1)
+    real_row = rec_idx < n
     slot = jnp.where(valid, pos[jnp.minimum(msg_dst, n)], r_cap)
 
     vals = _patched(n, H_pre, pos_p, patch[1], msg_src)  # post-update values
     vals_ms = sign * vals
 
-    # ---- SHRINK classification against tracked (S, C) --------------------
+    # ---- per-(message, dim) SHRINK classification, deduped per row -------
     S_dst_ms = sign * S_next[jnp.minimum(msg_dst, n - 1)]
     C_dst = C_next[jnp.minimum(msg_dst, n - 1)]
     covered = C_dst == msg_src[:, None].astype(C_dst.dtype)
     gone = is_del[:, None] | (S_dst_ms > vals_ms)
-    shrink_msg = (jnp.any(covered & gone, axis=1) & valid).astype(jnp.int32)
-    row_shrink = jax.ops.segment_max(shrink_msg, slot,
-                                     num_segments=r_cap + 1)[:r_cap] > 0
-    n_shrink = shrink_msg.sum()
+    dim_shrink = covered & gone & valid[:, None]
+    n_shrink = jnp.any(dim_shrink, axis=1).sum().astype(jnp.int32)
+    row_dim = jax.ops.segment_max(dim_shrink.astype(jnp.float32), slot,
+                                  num_segments=r_cap + 1)[:r_cap] > 0
 
-    # ---- SHRINK rows: pull + re-aggregate their current in-neighborhood --
-    degs = jnp.where(row_shrink & (rec_idx < n), in_csr.length[aff_c], 0)
-    psrc, fid, pvalid, pull_total = _ragged_gather(n, in_csr, aff_c, degs,
-                                                   p_cap)
-    overflow |= pull_total > p_cap
-    pvals = _patched(n, H_pre, pos_p, patch[1], psrc)
-    pseg = jnp.where(pvalid, fid, r_cap)
-    S_sh, C_sh = jnp_segment_extremum(agg, pvals, pseg, r_cap, psrc)
-
-    base_S = jnp.where(row_shrink[:, None], S_sh, S_next[aff_c])
-    base_C = jnp.where(row_shrink[:, None], C_sh, C_next[aff_c])
-
-    # ---- GROW: fold candidates in (idempotent on re-aggregated rows) -----
+    # ---- GROW candidate extremum + witnesses (also feeds the probe) ------
+    small_ids = n < (1 << 24)  # f32 witness ids are exact below 2^24
     is_cand = valid & ~is_del
     cslot = jnp.where(is_cand, slot, r_cap)
-    S_new, C_new = jnp_segment_extremum(agg, vals, cslot, r_cap, msg_src,
-                                        base=base_S, base_refs=base_C)
+    cand_S, cand_C = jnp_segment_extremum(agg, vals, cslot, r_cap, msg_src,
+                                          small_ids=small_ids)
+
+    S_pre_rows = S_next[aff_c]
+    C_pre_rows = C_next[aff_c]
+
+    # ---- re-cover probe: candidate ties-or-beats the lost extremum -------
+    recovered = row_dim & (sign * cand_S >= sign * S_pre_rows)
+    need = row_dim & ~recovered & real_row[:, None]
+    n_recover = recovered.sum().astype(jnp.int32)
+    n_pairs = need.sum()
+    n_reagg = jnp.any(need, axis=1).sum().astype(jnp.int32)
+
+    # ---- surviving (row, dim) cells: re-derive from the in-CSR -----------
+    # Two lowerings of the same per-dim algebra, chosen by static backend
+    # (the `_unique_recipients` precedent): on accelerators, pair-flatten
+    # the cells and gather single columns as element reads — pulled volume
+    # is exactly Σ shrunk-dims × degree; on XLA CPU (interpret mode),
+    # per-element scatter/gather lowering costs ~1us/lane, so rows that
+    # still need any dim are re-derived with one vector-friendly row
+    # gather instead (the probe still prunes whole rows, the counters
+    # still report cells — the algebra is identical, only the fetch
+    # granularity differs).
+    if interpret:  # CPU: row-granular vector gathers over needy rows
+        row_need = jnp.any(need, axis=1)
+        degs = jnp.where(row_need, in_csr.length[aff_c], 0)
+        psrc, fid, pvalid, pull_total = _ragged_gather(n, in_csr, aff_c,
+                                                       degs, p_cap)
+        overflow |= pull_total > p_cap
+        pvals = _patched(n, H_pre, pos_p, patch[1], psrc)
+        pseg = jnp.where(pvalid, fid, r_cap)
+        S_sh, C_sh = jnp_segment_extremum(agg, pvals, pseg, r_cap, psrc,
+                                          small_ids=small_ids)
+        base_S = jnp.where(row_need[:, None], S_sh, S_pre_rows)
+        base_C = jnp.where(row_need[:, None], C_sh, C_pre_rows)
+        MK = jnp.broadcast_to(row_need[:, None],
+                              S_pre_rows.shape).astype(jnp.float32)
+        RG = jnp.where(row_need[:, None], S_sh, 0.0)
+    else:  # accelerator: pair-flattened single-column element gathers
+        overflow |= n_pairs > pd_cap
+        pr, pdim = _masked_pairs(need, pd_cap, r_cap)
+        rows_pair = aff_c[jnp.minimum(pr, r_cap - 1)]
+        degs = jnp.where(pr < r_cap, in_csr.length[rows_pair], 0)
+        psrc, fid, pvalid, pull_total = _ragged_gather(n, in_csr, rows_pair,
+                                                       degs, p_cap)
+        overflow |= pull_total > p_cap
+        pdim_e = pdim[fid]
+        psrc_c = jnp.minimum(psrc, n - 1)
+        pslot = pos_p[psrc_c]
+        pvals = jnp.where(pslot >= 0,
+                          patch[1][jnp.maximum(pslot, 0), pdim_e],
+                          H_pre[psrc_c, pdim_e])
+        pseg = jnp.where(pvalid, fid, pd_cap)
+        S_pair, C_pair = jnp_segment_extremum(agg, pvals, pseg, pd_cap, psrc,
+                                              small_ids=small_ids)
+        base_S = S_pre_rows.at[pr, pdim].set(S_pair, mode="drop")
+        base_C = C_pre_rows.at[pr, pdim].set(C_pair, mode="drop")
+        MK = jnp.zeros_like(S_pre_rows).at[pr, pdim].set(1.0, mode="drop")
+        RG = jnp.zeros_like(S_pre_rows).at[pr, pdim].set(S_pair, mode="drop")
+
+    # ---- GROW: fold the candidate extremum in (elementwise) --------------
+    cand_wins = (sign * cand_S >= sign * base_S) & (cand_C >= 0)
+    S_new = jnp.where(cand_wins, cand_S, base_S)
+    C_new = jnp.where(cand_wins, cand_C, base_C)
 
     # ---- apply + filtered propagation ------------------------------------
     h_prev = _patched(n, H_pre, pos_p, patch[1], rec_idx)
     last = layer == workload.spec.n_layers - 1
     if pallas and workload.family in ("gc", "sage"):
         from repro.kernels.extremum_apply import extremum_apply
-        # the kernel fuses the fold + finite-mask + matmul; feed it the
-        # pre-fold base rows and the candidate-extremum mailbox (identity
-        # in candidate-less rows, so the fold is a no-op there).  Non-
-        # candidate lanes already route to the dropped segment via cslot,
-        # and this expression matches the helper's internal reduction
-        # exactly so XLA CSEs the two into one segment pass.
-        cand_ms = jax.ops.segment_max(vals_ms, cslot,
-                                      num_segments=r_cap + 1)[:r_cap]
+        # the masked kernel fuses the per-dim select (pre-batch rows vs
+        # re-aggregated cells), the candidate fold, the finite-mask and
+        # the matmul into one HBM pass; RG/MK carry the regime's re-derived
+        # cells (pair scatters on accelerators, row masks on CPU)
         maximize = sign > 0
         if workload.family == "gc":
-            S_new, h_new = extremum_apply(base_S, sign * cand_ms,
+            S_new, h_new = extremum_apply(S_pre_rows, cand_S,
                                           params_l["w"], params_l["b"],
+                                          reagg=RG, mask=MK,
                                           maximize=maximize, relu=not last,
                                           interpret=interpret)
         else:  # SAGE: fused neighbor term; self term stays a jnp matmul
-            S_new, h_new = extremum_apply(base_S, sign * cand_ms,
+            S_new, h_new = extremum_apply(S_pre_rows, cand_S,
                                           params_l["w_nbr"], params_l["b"],
+                                          reagg=RG, mask=MK,
                                           maximize=maximize, relu=False,
                                           interpret=interpret)
             h_new = h_new + h_prev @ params_l["w_self"]
@@ -603,30 +701,30 @@ def _monotonic_hop(workload: Workload, params_l: dict, layer: int, n: int,
         # algebra, so the pre-batch rows suffice for the call contract
         x = workload.normalize(S_new, state.k[aff_c])
         h_new = workload.update_fn(layer)(params_l, h_prev, x)
-    changed = jnp.any(h_new != state.H[layer + 1][aff_c], axis=1) \
-        & (rec_idx < n)
+    changed = jnp.any(h_new != state.H[layer + 1][aff_c], axis=1) & real_row
     frontier_next = jnp.where(changed, rec_idx, n)
-    n_reagg = (row_shrink & (rec_idx < n)).sum()
     sizes = jnp.stack([n_rec.astype(jnp.int32), needed.astype(jnp.int32),
-                       pull_total.astype(jnp.int32)])
+                       pull_total.astype(jnp.int32),
+                       n_pairs.astype(jnp.int32)])
     return (rec_idx, S_new, C_new, h_new), frontier_next, overflow, sizes, \
-        jnp.stack([n_shrink, n_reagg.astype(jnp.int32)])
+        jnp.stack([n_shrink, n_reagg, n_pairs.astype(jnp.int32), n_recover])
 
 
 def _propagate_monotonic_impl(workload: Workload, n: int,
-                              caps: tuple[tuple[int, int, int], ...],
+                              caps: tuple[tuple[int, int, int, int], ...],
                               params: list[dict], state: DeviceState,
                               out_csr: DeviceCSR, in_csr: DeviceCSR,
                               batch: BatchDev, *, pallas: bool = False,
                               interpret: bool = True):
     """L-hop monotonic (max/min) propagation of a routed batch.
 
-    caps[l] = (row_cap, edge_cap, pull_cap) at hop l; pull_cap bounds the
-    total in-degree of SHRINK rows re-aggregated that hop.  Returns
-    (new_state, final frontier idx, overflow flag, sizes [L, 3] needed per
-    hop, [shrink_events, rows_reaggregated]) — phase-1/phase-2 deferred
-    commit like ``propagate``, so an overflowing attempt commits nothing
-    even under buffer donation.
+    caps[l] = (row_cap, edge_cap, pull_cap, pair_cap) at hop l; pull_cap
+    bounds the total pulled *elements* (per-dim single-column gathers) and
+    pair_cap the number of (row, dim) cells re-aggregated that hop.
+    Returns (new_state, final frontier idx, overflow flag, sizes [L, 4]
+    needed per hop, [shrink_events, rows_reaggregated, dims_reaggregated,
+    recover_hits]) — phase-1/phase-2 deferred commit like ``propagate``,
+    so an overflowing attempt commits nothing even under buffer donation.
     """
     L = workload.spec.n_layers
 
@@ -636,15 +734,15 @@ def _propagate_monotonic_impl(workload: Workload, n: int,
     frontier = jnp.where(changed0, fv, n)  # hop-0 filtering: no-op writes stop
     patch = (fv, batch.feat_val)
     overflow = jnp.zeros((), dtype=bool)
-    stats = jnp.zeros((2,), dtype=jnp.int32)
+    stats = jnp.zeros((4,), dtype=jnp.int32)
     hops = []
     sizes = []
     for l in range(L):
-        r_cap, e_cap, p_cap = caps[l]
+        r_cap, e_cap, p_cap, pd_cap = caps[l]
         hop_patch, frontier, ovf, hop_sizes, hop_stats = _monotonic_hop(
             workload, params[l], l, n, state, out_csr, in_csr, batch,
             frontier, patch, r_cap=r_cap, e_cap=e_cap, p_cap=p_cap,
-            pallas=pallas, interpret=interpret)
+            pd_cap=pd_cap, pallas=pallas, interpret=interpret)
         overflow |= ovf
         stats = stats + hop_stats
         hops.append(hop_patch)
@@ -723,13 +821,16 @@ class DeviceEngine:
         self.in_mirror = DeviceCSRMirror(graph.inn) if self.monotonic else None
         self._bucket = min_bucket
         self._rung = 0          # transient retry boost (0 once sizes known)
-        self._hw = None         # per-hop high-water marks [L, 3] (r, e, p)
+        self._hw = None         # per-hop high-water marks: [L, 3] (r, e, 0)
+        #                         invertible, [L, 4] (r, e, p, pd) monotonic
         self._notes = 0         # high-water adoptions (settle-phase counter)
         self.retries = 0        # overflow retries across the stream
         self._pending = None    # (ovf, final, sizes, stats, batch, caps, k)
         self._last_affected = np.empty(0, dtype=np.int64)
         self.last_shrink_events = 0
         self.last_rows_reaggregated = 0
+        self.last_dims_reaggregated = 0
+        self.last_recover_hits = 0
         if warm:
             self._warm()
 
@@ -751,24 +852,34 @@ class DeviceEngine:
         e_max = nb(max(self.graph.num_edges, 1)) * 2
         n_b = nb(self.n)
         L = self.workload.spec.n_layers
+        # per-dim shrink channels: pairs are bounded by every dim of every
+        # row re-aggregating, pulled ELEMENTS by every edge read once per
+        # dim — both ceilings must exceed e_max or a batch whose pull
+        # volume tops the edge count can never fit and the ladder spins
+        max_d = nb(max(self.workload.spec.dims))
+        pd_max = n_b * max_d
+        p_max = e_max * max_d
         scale = 4 ** rung
         caps = []
         if self._hw is not None:
             for l in range(L):
-                r, e, p = (max(int(v * self._HEADROOM), 1) * scale
-                           for v in self._hw[l])
-                cap_l = (min(nb(r, minimum=self.min_bucket), n_b),
-                         min(nb(e, minimum=self.min_bucket), e_max))
+                chans = [max(int(v * self._HEADROOM), 1) * scale
+                         for v in self._hw[l]]
+                cap_l = (min(nb(chans[0], minimum=self.min_bucket), n_b),
+                         min(nb(chans[1], minimum=self.min_bucket), e_max))
                 if self.monotonic:
-                    cap_l += (min(nb(p, minimum=self.min_bucket), e_max),)
+                    cap_l += (min(nb(chans[2], minimum=self.min_bucket),
+                                  p_max),
+                              min(nb(chans[3], minimum=self.min_bucket),
+                                  pd_max))
                 caps.append(cap_l)
             return tuple(caps)
         r = min(nb(self._bucket * scale, minimum=self._bucket), n_b)
         e = min(nb(4 * r), e_max)
         rr, ee = r, e
         for _ in range(L):
-            caps.append((rr, ee, min(ee, e_max)) if self.monotonic
-                        else (rr, ee))
+            caps.append((rr, ee, min(ee, p_max), min(ee, pd_max))
+                        if self.monotonic else (rr, ee))
             rr = min(nb(rr * 4), n_b)
             ee = min(nb(ee * 4), e_max)
         return tuple(caps)
@@ -925,6 +1036,8 @@ class DeviceEngine:
             s = np.asarray(stats)
             self.last_shrink_events = int(s[0])
             self.last_rows_reaggregated = int(s[1])
+            self.last_dims_reaggregated = int(s[2])
+            self.last_recover_hits = int(s[3])
         if k_check is not None:
             np.testing.assert_allclose(np.asarray(self.state.k), k_check,
                                        err_msg="device k drifted from host "

@@ -21,8 +21,10 @@ slack or the pool bucket changes — never once per batch.
 Monotonic workloads (max/min) additionally carry contributor-ref arrays
 ``C`` on the mesh (relabeled ids; scattered on entry, mapped back to
 original ids on gather) and maintain the in-adjacency mirror in every
-mode, since SHRINK rows re-aggregate via request/response pulls (see
-distributed.make_monotonic_propagate and core/aggregators.py).
+mode, since shrunk (row, dim) cells re-aggregate via per-dim scalar
+request/response pulls — rc mode keeps the row-sized pull-everything
+baseline (see distributed.make_monotonic_propagate and
+core/aggregators.py).
 """
 from __future__ import annotations
 
@@ -172,6 +174,8 @@ class DistEngine:
         self.last_host_seconds = 0.0   # routing + CSR maintenance per batch
         self.last_shrink_events = 0       # monotonic: SHRINK messages
         self.last_rows_reaggregated = 0   # monotonic: rows re-aggregated
+        self.last_dims_reaggregated = 0   # monotonic: (row, dim) cells pulled
+        self.last_recover_hits = 0        # monotonic: probe-recovered cells
 
     # -- layout transforms -------------------------------------------------
     def _scatter(self, arr: np.ndarray) -> jax.Array:
@@ -304,6 +308,7 @@ class DistEngine:
         e = 4 * r
         halo = 4 * r
         pull = 8 * r
+        pd = 8 * r   # monotonic: (row, dim) re-aggregation pairs per hop
         L = self.workload.spec.n_layers
         nl_b = next_bucket(self.n_local)
         while True:
@@ -312,12 +317,12 @@ class DistEngine:
                 caps.append((min(rr, nl_b), ee))
                 rr, ee = rr * 4, ee * 4
             kind = "mono" if self.monotonic else self.mode
-            key = (kind, self.mode, tuple(caps), halo, pull)
+            key = (kind, self.mode, tuple(caps), halo, pull, pd)
             if key not in self._fn_cache:
                 if self.monotonic:
                     self._fn_cache[key] = make_monotonic_propagate(
                         self.mesh, self.workload, self.n_local, tuple(caps),
-                        halo, pull, data_axes=self.data_axes,
+                        halo, pull, pd, data_axes=self.data_axes,
                         rc=self.mode == "rc")
                 elif self.mode == "ripple":
                     self._fn_cache[key] = make_ripple_propagate(
@@ -346,6 +351,8 @@ class DistEngine:
                     s = np.asarray(sstats)
                     self.last_shrink_events = int(s[0])
                     self.last_rows_reaggregated = int(s[1])
+                    self.last_dims_reaggregated = int(s[2])
+                    self.last_recover_hits = int(s[3])
                 self.last_comm = np.asarray(comm)
                 f = np.asarray(final).reshape(-1)
                 offs = np.repeat(np.arange(self.n_parts) * self.n_local,
@@ -354,4 +361,4 @@ class DistEngine:
                 f_global = f_global[f_global >= 0]
                 orig = self.part.old_of_new[f_global]
                 return np.unique(orig[orig >= 0])
-            r, e, halo, pull = r * 4, e * 4, halo * 4, pull * 4
+            r, e, halo, pull, pd = r * 4, e * 4, halo * 4, pull * 4, pd * 4

@@ -36,7 +36,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from .aggregators import jnp_segment_extremum
-from .device_engine import _compact_mailbox
+from .device_engine import _compact_mailbox, _masked_pairs
 from .graph import DynamicGraph
 from .partition import Partitioning, ldg_partition
 from .workloads import Workload
@@ -163,6 +163,55 @@ def _pull_in_neighbors(n_parts: int, n_local: int, n_pad: int, dax, me,
         back_vals.reshape((-1,) + back_vals.shape[2:]), mode="drop")
     overflow = (total > pull_cap) | ovf
     return got, src_g, fid, evalid, ew, comm_req, overflow
+
+
+def _pull_in_neighbor_dims(n_parts: int, n_local: int, n_pad: int, dax, me,
+                           h_l: jax.Array, in_csr: "DistCSR",
+                           rows_c: jax.Array, dims: jax.Array,
+                           degs: jax.Array, pull_cap: int, pd_cap: int):
+    """Per-(row, dim) SHRINK re-aggregation pull — the dim-masked sibling of
+    :func:`_pull_in_neighbors`.
+
+    ``rows_c [pd_cap]`` are clamped local row ids of the (row, dim) pairs
+    being re-derived, ``dims [pd_cap]`` their local feature dims, ``degs
+    [pd_cap]`` the per-pair pull counts (0 skips a pair).  Each pulled lane
+    requests ONE scalar ``H[src, dim]`` from the source's owner — request
+    slots carry (lane, dim), response slots carry a single float32 instead
+    of a d_loc-wide row, which is where the shrink-pull comm drops from
+    row-sized to dim-masked payloads.  Returns (got [pull_cap] scalar
+    values, src_g [pull_cap] global source ids, fid [pull_cap] pair slot
+    per lane, evalid [pull_cap], comm_req globally-summed remote request
+    slots, overflow).
+    """
+    csum = jnp.cumsum(degs)
+    total = csum[-1]
+    e = jnp.arange(pull_cap, dtype=jnp.int32)
+    fid = jnp.minimum(jnp.searchsorted(csum, e, side="right").astype(jnp.int32),
+                      pd_cap - 1)
+    off = e - (csum[fid] - degs[fid])
+    evalid = e < total
+    flat = jnp.where(evalid, in_csr.start[rows_c[fid]] + off, 0)
+    src_g = jnp.where(evalid, in_csr.col[flat], n_pad)
+    dim_e = dims[fid]
+
+    # request: route (lane, dim) to the owner of src_g; owners reply the
+    # single requested scalar
+    payload = jnp.stack([jnp.arange(pull_cap, dtype=jnp.float32),
+                         dim_e.astype(jnp.float32)], axis=1)
+    req_ids, req_pay, counts, ovf = _pack_by_partition(
+        n_parts, n_local, pull_cap, src_g, payload)
+    comm_req = jax.lax.psum(counts.sum() - counts[me], dax)
+    r_req, r_pay = _exchange(req_ids, req_pay, dax)
+    rdim = jnp.clip(r_pay[..., 1].astype(jnp.int32), 0, h_l.shape[1] - 1)
+    scal = h_l[jnp.minimum(r_req, n_local - 1), rdim] * (r_req < n_local)
+    _, back = _exchange(r_req, scal[..., None], dax)
+    slot = req_pay[..., 0].astype(jnp.int32).reshape(-1)
+    filled = (req_ids < n_local).reshape(-1)
+    got = jnp.zeros((pull_cap,), h_l.dtype)
+    got = got.at[jnp.where(filled, slot, pull_cap)].set(
+        back.reshape(-1), mode="drop")
+    overflow = (total > pull_cap) | ovf
+    return got, src_g, fid, evalid, comm_req, overflow
 
 
 def _local_frontier_messages(n_local: int, n_pad: int, h_l: jax.Array,
@@ -332,18 +381,27 @@ def make_ripple_propagate(mesh, workload: Workload, n_local: int,
 # ---------------------------------------------------------------------------
 def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
                              caps: tuple, halo_cap: int, pull_cap: int,
+                             pd_cap: int = 0,
                              data_axes: tuple = ("data",), *,
                              rc: bool = False):
     """Distributed GROW/SHRINK propagation for max/min workloads.
 
     Mailboxes ship *candidate extrema* (value + global source id + delete
     flag) to the owner of each destination; the owner classifies every
-    message against its tracked (S, C) rows.  SHRINK rows re-aggregate over
-    their current in-neighborhood via a request/response pull — remote
-    embeddings are fetched for exactly the covered-removal rows, which is
-    the communication contrast ``dist_bench`` measures against ``rc=True``
-    (the unfiltered baseline: every affected row re-aggregates and the
-    frontier never filters, i.e. distributed RC for the monotonic family).
+    message against its tracked (S, C) rows at per-(row, dim) granularity.
+    Shrunk cells first run the re-cover probe (a candidate that
+    ties-or-beats the lost extremum re-witnesses the dim pull-free), then
+    the survivors re-aggregate via per-dim request/response pulls: each
+    pulled lane fetches ONE scalar ``H[src, dim]`` instead of a d_loc-wide
+    row (``pd_cap`` bounds the (row, dim) pairs per hop, ``pull_cap`` the
+    pulled elements).  Because the feature dims are sharded over the model
+    axis, each model shard re-derives exactly its own shrunk dims — no
+    cross-model reduction is needed for the shrink masks, only for the
+    row-level propagation decisions.  This is the communication contrast
+    ``dist_bench`` measures against ``rc=True`` (the unfiltered baseline:
+    every affected row re-aggregates a full row via the row-sized pull
+    path and the frontier never filters, i.e. distributed RC for the
+    monotonic family).
 
     Contributor ids ride the halo exchange as float32 payload channels, so
     the relabeled id space must stay below 2^24 (exact float32 integers).
@@ -381,8 +439,10 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
         frontier = fv if rc else jnp.where(changed0, fv, n_local)
         overflow = jnp.zeros((), bool)
         comm = []
-        n_shrink = jnp.zeros((), jnp.int32)   # SHRINK-classified messages
-        n_reagg = jnp.zeros((), jnp.int32)    # rows re-aggregated
+        n_shrink = jnp.zeros((), jnp.float32)   # SHRINK-classified messages
+        n_reagg = jnp.zeros((), jnp.float32)    # rows re-aggregated
+        n_dims = jnp.zeros((), jnp.float32)     # (row, dim) cells gathered
+        n_recover = jnp.zeros((), jnp.float32)  # probe-recovered cells
 
         for l in range(L):
             r_cap, e_cap = caps[l]
@@ -447,57 +507,97 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
                                       mode="drop")
             slot = jnp.where(rvalid, pos[jnp.minimum(mdst, n_local)], r_cap)
 
-            # ---- SHRINK classification against tracked (S, C) ------------
+            # ---- per-(message, local dim) SHRINK classification ----------
+            S_pre_rows = S[l + 1][aff_c]
+            C_pre_rows = C[l + 1][aff_c]
             S_dst_ms = sign * S[l + 1][jnp.minimum(mdst, n_local - 1)]
             C_dst = C[l + 1][jnp.minimum(mdst, n_local - 1)]
             covered = C_dst == rsrc_g[:, None]
             gone = rdel[:, None] | (S_dst_ms > rval_ms)
-            shrink_msg = (jnp.any(covered & gone, axis=1) & rvalid
-                          ).astype(jnp.int32)
-            # model-consistent: a row shrinks if ANY of its d dims (spread
-            # over the model shards) lost a covering contribution
-            row_shrink = jax.lax.psum(
-                jax.ops.segment_max(shrink_msg, slot,
-                                    num_segments=r_cap + 1)[:r_cap]
-                .astype(jnp.float32), "model") > 0
-            if rc:  # unfiltered baseline: every affected row re-aggregates
-                row_shrink = rec_idx < n_local
+            dim_shrink = covered & gone & rvalid[:, None]
+            # message-level stat: ANY of the full d dims (spread over the
+            # model shards) lost its covering contribution
+            shrink_full = jax.lax.psum(
+                jnp.any(dim_shrink, axis=1).astype(jnp.float32), "model") > 0
+            n_shrink = n_shrink + shrink_full.sum()
 
-            # ---- SHRINK rows: pull their in-neighborhoods ----------------
-            pdegs = jnp.where(row_shrink & (rec_idx < n_local),
-                              in_csr.length[aff_c], 0)
-            got, psrc_g, pfid, pvalid, _ew, comm_req, p_ovf = \
-                _pull_in_neighbors(n_parts, n_local, n_pad, dax, me, H[l],
-                                   in_csr, aff_c, pdegs, pull_cap, r_cap)
-            overflow |= p_ovf
-            # comm accounting, two slots per hop: candidate-halo traffic
-            # (paid by both modes) and re-aggregation pull traffic (the
-            # SHRINK-only vs pull-everything contrast dist_bench measures;
-            # each requested id comes back as one value slot)
-            comm.append(jax.lax.psum(halo_remote, dax))
-            comm.append(2 * comm_req)
-
-            pseg = jnp.where(pvalid, pfid, r_cap)
-            S_sh, C_sh = jnp_segment_extremum(agg, got, pseg, r_cap, psrc_g)
-
-            base_S = jnp.where(row_shrink[:, None], S_sh, S[l + 1][aff_c])
-            base_C = jnp.where(row_shrink[:, None], C_sh, C[l + 1][aff_c])
-
-            # ---- GROW: fold candidates in --------------------------------
+            # ---- GROW candidate extremum + witnesses (feeds the probe) ---
             is_cand = rvalid & ~rdel
             cslot = jnp.where(is_cand, slot, r_cap)
-            S_new, C_new = jnp_segment_extremum(
-                agg, rpay[:, :d_loc], cslot, r_cap, rsrc_g,
-                base=base_S, base_refs=base_C)
+            cand_S, cand_C = jnp_segment_extremum(
+                agg, rpay[:, :d_loc], cslot, r_cap, rsrc_g, small_ids=True)
 
-            # shrink accounting (bench stats): a message SHRINKs when ANY
-            # of its full-d dims (spread over the model shards) lost its
-            # covering contribution; rows re-aggregate model-consistently
-            shrink_full = jax.lax.psum(shrink_msg.astype(jnp.float32),
-                                       "model") > 0
-            n_shrink = n_shrink + shrink_full.sum().astype(jnp.int32)
-            n_reagg = n_reagg + (row_shrink & (rec_idx < n_local)
-                                 ).sum().astype(jnp.int32)
+            real_row = rec_idx < n_local
+            if rc:
+                # unfiltered baseline: every affected row re-aggregates its
+                # FULL row through the row-sized pull path
+                row_shrink = real_row
+                pdegs = jnp.where(row_shrink, in_csr.length[aff_c], 0)
+                got, psrc_g, pfid, pvalid, _ew, comm_req, p_ovf = \
+                    _pull_in_neighbors(n_parts, n_local, n_pad, dax, me,
+                                       H[l], in_csr, aff_c, pdegs,
+                                       pull_cap, r_cap)
+                overflow |= p_ovf
+                pseg = jnp.where(pvalid, pfid, r_cap)
+                S_sh, C_sh = jnp_segment_extremum(agg, got, pseg, r_cap,
+                                                  psrc_g, small_ids=True)
+                base_S = jnp.where(row_shrink[:, None], S_sh, S_pre_rows)
+                base_C = jnp.where(row_shrink[:, None], C_sh, C_pre_rows)
+                n_rows_re = row_shrink.sum().astype(jnp.float32)
+                n_reagg = n_reagg + n_rows_re
+                n_dims = n_dims + jax.lax.psum(n_rows_re * d_loc, "model")
+                # row-sized responses: one d_loc-wide value row per request
+                pull_req, pull_resp = (jax.lax.psum(comm_req, "model"),
+                                       jax.lax.psum(comm_req * d_loc,
+                                                    "model"))
+            else:
+                # each model shard owns its d_loc dims outright: the shrink
+                # mask, probe, and pulls are all shard-local — only the
+                # row-level frontier decision below crosses the model axis
+                row_dim = jax.ops.segment_max(
+                    dim_shrink.astype(jnp.int32), slot,
+                    num_segments=r_cap + 1)[:r_cap] > 0
+                recovered = row_dim & (sign * cand_S >= sign * S_pre_rows)
+                need = row_dim & ~recovered & real_row[:, None]
+                n_recover = n_recover + jax.lax.psum(
+                    recovered.sum().astype(jnp.float32), "model")
+                n_pairs = need.sum()
+                overflow |= n_pairs > pd_cap
+                n_dims = n_dims + jax.lax.psum(
+                    n_pairs.astype(jnp.float32), "model")
+                n_reagg = n_reagg + (jax.lax.psum(
+                    jnp.any(need, axis=1).astype(jnp.float32), "model")
+                    > 0).sum()
+
+                pr, pdim = _masked_pairs(need, pd_cap, r_cap)
+                rows_pair = aff_c[jnp.minimum(pr, r_cap - 1)]
+                pdegs = jnp.where(pr < r_cap, in_csr.length[rows_pair], 0)
+                got, psrc_g, pfid, pvalid, comm_req, p_ovf = \
+                    _pull_in_neighbor_dims(n_parts, n_local, n_pad, dax, me,
+                                           H[l], in_csr, rows_pair, pdim,
+                                           pdegs, pull_cap, pd_cap)
+                overflow |= p_ovf
+                pseg = jnp.where(pvalid, pfid, pd_cap)
+                S_pair, C_pair = jnp_segment_extremum(
+                    agg, got, pseg, pd_cap, psrc_g, small_ids=True)
+                base_S = S_pre_rows.at[pr, pdim].set(S_pair, mode="drop")
+                base_C = C_pre_rows.at[pr, pdim].set(C_pair, mode="drop")
+                # dim-masked responses: one scalar per request
+                pull_req, pull_resp = (jax.lax.psum(comm_req, "model"),
+                                       jax.lax.psum(comm_req, "model"))
+
+            # comm accounting, three slots per hop: candidate-halo traffic
+            # (paid by both modes), re-aggregation pull requests, and pull
+            # response payload in scalar units — the row-sized vs
+            # dim-masked contrast dist_bench measures
+            comm.append(jax.lax.psum(halo_remote, dax))
+            comm.append(pull_req)
+            comm.append(pull_resp)
+
+            # ---- GROW: fold the candidate extremum in (elementwise) ------
+            cand_wins = (sign * cand_S >= sign * base_S) & (cand_C >= 0)
+            S_new = jnp.where(cand_wins, cand_S, base_S)
+            C_new = jnp.where(cand_wins, cand_C, base_C)
 
             # ---- apply + (filtered) propagation --------------------------
             x = agg.normalize(S_new, k[aff_c], xp=jnp)
@@ -516,7 +616,7 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
         add_back = lambda t: jax.tree.map(lambda a: a[None], t)
         ovf_g = jax.lax.psum(overflow.astype(jnp.float32), dax)
         shrink_stats = jax.lax.psum(
-            jnp.stack([n_shrink, n_reagg]).astype(jnp.float32), dax)
+            jnp.stack([n_shrink, n_reagg, n_dims, n_recover]), dax)
         return (add_back(H), add_back(S), add_back(C), add_back(frontier),
                 ovf_g, jnp.stack(comm), shrink_stats)
 

@@ -43,7 +43,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .aggregators import np_segment_extremum, np_shrink_mask
+from .aggregators import np_segment_extremum, np_shrink_dims
 from .graph import DynamicGraph, EdgeUpdate, UpdateBatch, flat_row_indices
 from .state import InferenceState
 from .workloads import Workload
@@ -61,7 +61,9 @@ class BatchStats:
     wall_seconds: float = 0.0
     final_affected: np.ndarray | None = None
     shrink_events: int = 0      # monotonic: messages classified SHRINK
-    rows_reaggregated: int = 0  # monotonic: rows re-aggregated over in-nbrs
+    rows_reaggregated: int = 0  # monotonic: rows with >=1 re-aggregated dim
+    dims_reaggregated: int = 0  # monotonic: (row, dim) cells gathered
+    recover_hits: int = 0       # monotonic: shrunk dims re-covered probe-free
 
     @property
     def total_affected(self) -> int:
@@ -218,10 +220,16 @@ class RippleEngine(_EngineBase):
 
         Per hop: the frontier's out-edges plus the batch's edge updates form
         one message stream (dst, src, is_del); each message is classified
-        against the tracked (S, C) rows — SHRINK rows re-aggregate over
-        their current in-neighborhood, then all candidate values fold in
-        with one idempotent elementwise min/max (re-aggregated rows absorb
-        them for free).  Only rows whose embedding changed propagate.
+        against the tracked (S, C) rows at per-dim granularity.  Shrunk
+        (row, dim) cells first run the re-cover probe — a surviving GROW
+        candidate that ties-or-beats the stored extremum re-witnesses the
+        dim and the gather is skipped entirely; the remainder re-aggregate
+        as pair-flattened single-column gathers over the row's current
+        in-neighborhood (never the full row).  Candidate values strictly
+        covered in every dim are dropped before the fold (they cannot grow
+        a dim, cannot re-witness one, and re-aggregated dims see their
+        value through the in-CSR), then the survivors fold in with one
+        elementwise min/max.  Only rows whose embedding changed propagate.
         """
         t0 = time.perf_counter()
         stats = BatchStats()
@@ -268,32 +276,52 @@ class RippleEngine(_EngineBase):
             slot = self._pos[msg_dst]
             S_aff = S_next[affected].copy()
             C_aff = C_next[affected].copy()
+            d = S_aff.shape[1]
 
-            # ---- classify: SHRINK probes re-aggregate their row ----------
-            shrink = np_shrink_mask(agg, C_next[msg_dst], S_next[msg_dst],
-                                    msg_src, H_l[msg_src], is_del)
-            row_shrink = np.zeros(affected.size, dtype=bool)
-            row_shrink[slot[shrink]] = True
-            stats.shrink_events += int(shrink.sum())
-            sh_rows = affected[row_shrink]
-            if sh_rows.size:
-                in_degs = g.inn.length[sh_rows]
-                flat_in = flat_row_indices(g.inn.start[sh_rows], in_degs)
-                nbr = g.inn.col[flat_in]
-                seg = np.repeat(np.arange(sh_rows.size), in_degs)
-                S_re, C_re = np_segment_extremum(agg, H_l[nbr], seg,
-                                                 sh_rows.size, nbr)
-                S_aff[row_shrink] = S_re
-                C_aff[row_shrink] = C_re
-                stats.numeric_ops += int(in_degs.sum())
-                stats.rows_reaggregated += int(sh_rows.size)
+            # ---- classify per-(message, dim); dedup into a row mask ------
+            vals_all = H_l[msg_src]
+            S_msg = S_next[msg_dst]
+            dim_shrink = np_shrink_dims(agg, C_next[msg_dst], S_msg,
+                                        msg_src, vals_all, is_del)
+            shrink_any = dim_shrink.any(axis=1)
+            stats.shrink_events += int(shrink_any.sum())
+            row_dim = np.zeros((affected.size, d), dtype=bool)
+            if shrink_any.any():
+                np.logical_or.at(row_dim, slot[shrink_any],
+                                 dim_shrink[shrink_any])
 
-            # ---- GROW: fold candidates in (idempotent on shrink rows) ----
-            cand = ~is_del
-            c_slot, c_src = slot[cand], msg_src[cand]
-            c_val = H_l[c_src]
-            agg.ufunc.at(S_aff, c_slot, c_val)
+            # ---- candidates: strictly-covered ones drop before the fold --
+            covered = agg.improves(S_msg, vals_all)
+            keep = ~is_del & ~covered.all(axis=1)
+            c_slot, c_src, c_val = slot[keep], msg_src[keep], vals_all[keep]
+            cand_ext = np.full((affected.size, d), agg.identity, dtype=_F)
+            agg.ufunc.at(cand_ext, c_slot, c_val)
             stats.numeric_ops += int(c_src.size)
+
+            # ---- re-cover probe, then per-dim re-aggregation -------------
+            if row_dim.any():
+                recovered = row_dim & ~agg.improves(S_aff, cand_ext)
+                stats.recover_hits += int(recovered.sum())
+                pr, pd = np.nonzero(row_dim & ~recovered)
+            else:
+                pr = pd = np.empty(0, dtype=np.int64)
+            if pr.size:
+                rows = affected[pr]
+                in_degs = g.inn.length[rows]
+                flat_in = flat_row_indices(g.inn.start[rows], in_degs)
+                nbr = g.inn.col[flat_in]
+                seg = np.repeat(np.arange(pr.size), in_degs)
+                dcol = np.repeat(pd, in_degs)
+                S_re, C_re = np_segment_extremum(agg, H_l[nbr, dcol], seg,
+                                                 pr.size, nbr)
+                S_aff[pr, pd] = S_re
+                C_aff[pr, pd] = C_re
+                stats.numeric_ops += int(in_degs.sum())
+                stats.dims_reaggregated += int(pr.size)
+                stats.rows_reaggregated += int(np.unique(pr).size)
+
+            # ---- GROW: fold surviving candidates + witness refs ----------
+            S_aff = agg.ufunc(S_aff, cand_ext)
             if c_src.size:
                 jj, dd = np.nonzero(c_val == S_aff[c_slot])
                 C_aff[c_slot[jj], dd] = c_src[jj]

@@ -1,6 +1,8 @@
 # Pallas TPU kernels for the compute hot-spots:
 #   segment_mm     — block-sparse (BSR) message-passing SpMM on the MXU
 #   delta_apply    — fused RIPPLE mailbox-apply + UPDATE matmul + activation
+#   extremum_apply — fused monotonic fold (+ per-dim shrink mask) + UPDATE
+#   mlp_apply      — fused GIN apply: fold + z-term + two chained matmuls
 #   embedding_bag  — DLRM multi-hot gather-reduce with scalar-prefetch
 #   flash_attention— causal online-softmax attention with GQA
 # Each ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper

@@ -52,9 +52,39 @@ def _kernel(S_ref, M_ref, W_ref, b_ref, Snew_ref, h_ref, acc_ref,
         h_ref[...] = h.astype(h_ref.dtype)
 
 
+def _kernel_masked(S_ref, M_ref, RG_ref, Mk_ref, W_ref, b_ref, Snew_ref,
+                   h_ref, acc_ref, *, maximize: bool, relu: bool, n_k: int):
+    """Per-dim masked variant: shrunk (row, dim) cells swap in their
+    re-aggregated value before the candidate fold, all in one HBM pass::
+
+        base = mask ? reagg : S;  S' = extremum(base, M)
+    """
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    combine = jnp.maximum if maximize else jnp.minimum
+    base = jnp.where(Mk_ref[...] != 0, RG_ref[...], S_ref[...])
+    S_new = combine(base, M_ref[...])
+    Snew_ref[...] = S_new  # write-back (same value for every j tile)
+    x = jnp.where(jnp.isfinite(S_new), S_new, 0.0)
+    acc_ref[...] += jnp.dot(x.astype(jnp.float32), W_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(kk == n_k - 1)
+    def _fin():
+        h = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if relu:
+            h = jnp.maximum(h, 0.0)
+        h_ref[...] = h.astype(h_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("maximize", "relu", "row_tile",
                                              "k_tile", "out_tile", "interpret"))
-def extremum_apply_pallas(S, mailbox, W, b, *, maximize: bool, relu: bool,
+def extremum_apply_pallas(S, mailbox, W, b, reagg=None, mask=None, *,
+                          maximize: bool, relu: bool,
                           row_tile: int = 128, k_tile: int = 128,
                           out_tile: int = 128, interpret: bool = True):
     R, Din = S.shape
@@ -63,19 +93,29 @@ def extremum_apply_pallas(S, mailbox, W, b, *, maximize: bool, relu: bool,
     k_tile = min(k_tile, Din)
     out_tile = min(out_tile, Dout)
     assert R % row_tile == 0 and Din % k_tile == 0 and Dout % out_tile == 0
+    masked = reagg is not None
+    assert masked == (mask is not None), "reagg and mask travel together"
     n_k = Din // k_tile
     grid = (R // row_tile, Dout // out_tile, n_k)
 
-    kern = functools.partial(_kernel, maximize=maximize, relu=relu, n_k=n_k)
+    row_k = pl.BlockSpec((row_tile, k_tile), lambda i, j, kk: (i, kk))
+    in_specs = [row_k, row_k]                                         # S, M
+    args = [S, mailbox]
+    if masked:
+        in_specs += [row_k, row_k]                                    # RG, MK
+        args += [reagg, mask]
+    in_specs += [
+        pl.BlockSpec((k_tile, out_tile), lambda i, j, kk: (kk, j)),   # W
+        pl.BlockSpec((out_tile,), lambda i, j, kk: (j,)),             # b
+    ]
+    args += [W, b]
+
+    kern = functools.partial(_kernel_masked if masked else _kernel,
+                             maximize=maximize, relu=relu, n_k=n_k)
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((row_tile, k_tile), lambda i, j, kk: (i, kk)),   # S
-            pl.BlockSpec((row_tile, k_tile), lambda i, j, kk: (i, kk)),   # M
-            pl.BlockSpec((k_tile, out_tile), lambda i, j, kk: (kk, j)),   # W
-            pl.BlockSpec((out_tile,), lambda i, j, kk: (j,)),             # b
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((row_tile, k_tile), lambda i, j, kk: (i, kk)),   # S'
             pl.BlockSpec((row_tile, out_tile), lambda i, j, kk: (i, j)),  # h
@@ -84,4 +124,4 @@ def extremum_apply_pallas(S, mailbox, W, b, *, maximize: bool, relu: bool,
                    jax.ShapeDtypeStruct((R, Dout), S.dtype)],
         scratch_shapes=[pltpu.VMEM((row_tile, out_tile), jnp.float32)],
         interpret=interpret,
-    )(S, mailbox, W, b)
+    )(*args)

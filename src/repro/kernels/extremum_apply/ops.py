@@ -21,9 +21,16 @@ def _pad_to(x, mult, axis, fill=0.0):
     return jnp.pad(x, pad, constant_values=fill)
 
 
-def extremum_apply(S, mailbox, W, b, *, maximize: bool = True,
-                   relu: bool = True, interpret: bool = True):
-    """Fused S' = extremum(S, M); h = act(finite(S')@W + b).  128-tiles."""
+def extremum_apply(S, mailbox, W, b, *, reagg=None, mask=None,
+                   maximize: bool = True, relu: bool = True,
+                   interpret: bool = True):
+    """Fused S' = extremum(S, M); h = act(finite(S')@W + b).  128-tiles.
+
+    With ``reagg``/``mask`` (the per-dim SHRINK variant) the base rows are
+    ``mask ? reagg : S`` — re-aggregated (row, dim) cells replace the
+    stored extremum before the candidate fold, fused into the same pass.
+    Masked padding cells stay 0 so padded lanes remain inert.
+    """
     R0, Din0 = S.shape
     Dout0 = W.shape[1]
     ident = -jnp.inf if maximize else jnp.inf
@@ -34,7 +41,11 @@ def extremum_apply(S, mailbox, W, b, *, maximize: bool = True,
     mailbox = _pad_to(_pad_to(mailbox, rt, 0, fill=ident), kt, 1, fill=ident)
     W = _pad_to(_pad_to(W, kt, 0), ot, 1)
     b = _pad_to(b, ot, 0)
-    S_new, h = extremum_apply_pallas(S, mailbox, W, b, maximize=maximize,
+    if reagg is not None:
+        reagg = _pad_to(_pad_to(reagg, rt, 0), kt, 1)
+        mask = _pad_to(_pad_to(mask, rt, 0), kt, 1)
+    S_new, h = extremum_apply_pallas(S, mailbox, W, b, reagg, mask,
+                                     maximize=maximize,
                                      relu=relu, row_tile=rt, k_tile=kt,
                                      out_tile=ot, interpret=interpret)
     return S_new[:R0, :Din0], h[:R0, :Dout0]

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 
 
-def extremum_apply_ref(S, mailbox, W, b, *, maximize: bool, relu: bool):
+def extremum_apply_ref(S, mailbox, W, b, *, reagg=None, mask=None,
+                       maximize: bool, relu: bool):
+    if reagg is not None:
+        S = jnp.where(mask != 0, reagg, S)
     S_new = jnp.maximum(S, mailbox) if maximize else jnp.minimum(S, mailbox)
     x = jnp.where(jnp.isfinite(S_new), S_new, 0.0)
     h = x @ W + b

@@ -1,0 +1,1 @@
+from .ops import mlp_apply  # noqa: F401

@@ -1,0 +1,14 @@
+"""Oracle for the fused GIN MLP apply (matches workloads._gin_update)."""
+import jax
+import jax.numpy as jnp
+
+
+def mlp_apply_ref(S, mailbox, h_prev, k, eps, W1, b1, W2, b2, *,
+                  mean: bool, relu: bool):
+    S_new = S + mailbox
+    x = S_new / jnp.maximum(k, 1.0)[:, None] if mean else S_new
+    z = (1.0 + eps) * h_prev + x
+    h = jax.nn.relu(z @ W1 + b1) @ W2 + b2
+    if relu:
+        h = jax.nn.relu(h)
+    return S_new, h

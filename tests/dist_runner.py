@@ -67,8 +67,9 @@ def run(mode: str, name: str) -> None:
         rep = s.ingest(updates[step * 5:(step + 1) * 5])
         comm = rep.results[-1].messages_per_hop
         assert_exact(s, f"{mode}/{name} step {step}")
-    # monotonic comm interleaves [halo, pull] per hop -> 2 slots per layer
-    n_slots = 4 if s.workload.spec.monotonic else 2
+    # monotonic comm interleaves [halo, pull_req, pull_resp] per hop
+    # -> 3 slots per layer
+    n_slots = 6 if s.workload.spec.monotonic else 2
     assert comm is not None and len(comm) == n_slots
     print(f"OK {mode} {name} comm={comm}")
 

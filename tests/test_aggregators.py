@@ -128,6 +128,83 @@ def test_delete_the_argmax(name, engine):
         assert shrinks > 0
 
 
+def _one_dim_argmax_victim(session):
+    """Find (v, u, dim): u is v's tracked layer-1 contributor in EXACTLY
+    one feature dim (so deleting edge u->v shrinks exactly one cell)."""
+    st = session.sync()
+    C1 = st.C[1]
+    for v in range(C1.shape[0]):
+        refs = C1[v]
+        if (refs < 0).all():
+            continue
+        uniq, counts = np.unique(refs[refs >= 0], return_counts=True)
+        for u, c in zip(uniq, counts):
+            if c == 1 and session.graph.has_edge(int(u), int(v)):
+                return int(v), int(u), int(np.nonzero(refs == u)[0][0])
+    return None
+
+
+@pytest.mark.parametrize("name", MONOTONIC_WORKLOAD_NAMES)
+@pytest.mark.parametrize("engine,opts", [
+    ("ripple", {}),
+    ("device", {}),                 # donated buffers (default)
+    ("device", {"donate": False}),  # fresh-buffer path
+    ("dist", {}),                   # default mesh (all local devices)
+])
+def test_per_dim_shrink_gathers_only_touched_dims(name, engine, opts):
+    """Adversarial per-dim SHRINK: deleting the argmax edge of exactly ONE
+    dim re-aggregates exactly that (vertex, dim) cell — untouched dims
+    never enter the re-derivation (dims_reaggregated counts the algebra's
+    cells; the host/dist engines fetch exactly those cells, the device
+    engine's CPU lowering fetches them as vector rows) — and a batch whose
+    own surviving candidate re-witnesses the lost extremum skips the
+    gather entirely (re-cover probe counter).  One hop so the counters are
+    exact.
+    """
+    s = _build(name, engine, n=40, m=170, n_layers=1, engine_options=opts)
+    victim = _one_dim_argmax_victim(s)
+    assert victim is not None, "seed graph has no single-dim contributor"
+    v, u, _ = victim
+    res = s.ingest(UpdateBatch(edges=[EdgeUpdate(u, v, False)]))
+    _assert_exact(s, f"{name}/{engine} one-dim shrink")
+    # the tracked extremum is bit-exact against the from-scratch aggregate
+    st = s.sync()
+    _, S_ref = full_inference(s.workload, s.params,
+                              jax.numpy.asarray(st.H[0]), *s.graph.coo(),
+                              s.graph.in_degree)
+    np.testing.assert_array_equal(st.S[1], np.asarray(S_ref[1]))
+    r = res.results[0]
+    assert r.shrink_events >= 1
+    assert r.rows_reaggregated == 1
+    assert r.dims_reaggregated == 1, \
+        f"untouched dims were gathered ({r.dims_reaggregated} cells)"
+    assert r.recover_hits == 0
+
+    # re-cover probe: delete another single-dim argmax, but hand the row a
+    # same-batch candidate that beats the lost extremum in every dim — the
+    # shrunk cell is re-witnessed by the GROW fold, no gather at all
+    victim2 = _one_dim_argmax_victim(s)
+    if victim2 is None:
+        return
+    v2, u2, _ = victim2
+    sign = 1.0 if s.workload.spec.aggregator == "max" else -1.0
+    g = s.graph
+    w = next(int(x) for x in range(g.n)
+             if x not in (v2, u2) and not g.has_edge(int(x), v2))
+    d_in = st.H[0].shape[1]
+    batch = UpdateBatch(
+        features=[FeatureUpdate(
+            w, (sign * 100.0 * np.ones(d_in)).astype(np.float32))],
+        edges=[EdgeUpdate(u2, v2, False), EdgeUpdate(w, v2, True)])
+    res2 = s.ingest(batch)
+    _assert_exact(s, f"{name}/{engine} re-cover probe")
+    r2 = res2.results[0]
+    assert r2.shrink_events >= 1
+    assert r2.recover_hits >= 1, "re-cover probe never fired"
+    assert r2.dims_reaggregated == 0, \
+        "re-covered dim was gathered from the CSR anyway"
+
+
 def test_delete_last_in_edge_empties_row():
     """Removing a vertex's only in-edge must fall back to the identity
     aggregate (reads as 0 through normalize) and clear the contributor."""

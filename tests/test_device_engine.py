@@ -152,7 +152,8 @@ def test_overflow_commits_nothing(name):
     dev_batch, out_rows, in_rows = eng._route(batch)
     before = {"H": eng.host_H(), "S": [np.array(s) for s in eng.state.S],
               "k": np.array(eng.state.k)}
-    caps = ((4, 4, 4), (4, 4, 4)) if eng.monotonic else ((4, 4), (4, 4))
+    caps = ((4, 4, 4, 4), (4, 4, 4, 4)) if eng.monotonic \
+        else ((4, 4), (4, 4))
     if eng.monotonic:
         new_state, final, ovf, sizes, _stats = propagate_monotonic_donated(
             wl, eng.n, caps, eng.params, eng.state,
@@ -188,7 +189,8 @@ def test_donated_path_matches_fresh_nondonated(name):
                                    err_msg=f"{name} layer {l}")
 
 
-@pytest.mark.parametrize("name", ["gc-s", "gc-m", "gs-s", "gc-min", "gs-max"])
+@pytest.mark.parametrize("name", ["gc-s", "gc-m", "gs-s", "gi-s", "gc-min",
+                                  "gs-max"])
 def test_pallas_hop_apply_matches_jnp(name):
     """The fused Pallas hop-apply (interpret mode off-TPU) must match the
     jnp oracle path for both algebra families."""

@@ -73,6 +73,57 @@ def test_extremum_apply(R, Din, Dout, maximize, relu):
 
 
 # ---------------------------------------------------------------------------
+@pytest.mark.parametrize("R,Din,Dout", [(64, 32, 16), (128, 128, 128),
+                                        (33, 48, 7)])
+@pytest.mark.parametrize("maximize", [True, False])
+def test_extremum_apply_masked(R, Din, Dout, maximize):
+    """Per-dim SHRINK variant: masked cells swap in their re-aggregated
+    value before the candidate fold, fused into the same pass."""
+    from repro.kernels.extremum_apply import extremum_apply
+    from repro.kernels.extremum_apply.ref import extremum_apply_ref
+    ident = -jnp.inf if maximize else jnp.inf
+    S = jnp.asarray(RNG.normal(size=(R, Din)), jnp.float32)
+    M = jnp.asarray(RNG.normal(size=(R, Din)), jnp.float32)
+    M = M.at[jnp.asarray(RNG.choice(R, size=R // 4, replace=False))].set(ident)
+    # sparse shrink mask: a few (row, dim) cells re-derive their extremum
+    mask = jnp.asarray(RNG.random((R, Din)) < 0.07, jnp.float32)
+    RG = jnp.asarray(RNG.normal(size=(R, Din)), jnp.float32) * mask
+    W = jnp.asarray(RNG.normal(size=(Din, Dout)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=Dout), jnp.float32)
+    Sn, h = extremum_apply(S, M, W, b, reagg=RG, mask=mask,
+                           maximize=maximize, relu=True)
+    Sr, hr = extremum_apply_ref(S, M, W, b, reagg=RG, mask=mask,
+                                maximize=maximize, relu=True)
+    np.testing.assert_array_equal(np.asarray(Sn), np.asarray(Sr))
+    np.testing.assert_allclose(h, hr, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("R,Din,Dh,Dout", [(64, 32, 32, 16),
+                                           (128, 128, 128, 128),
+                                           (33, 48, 20, 7)])
+@pytest.mark.parametrize("mean,relu", [(False, True), (True, False)])
+def test_mlp_apply(R, Din, Dh, Dout, mean, relu):
+    """GIN's fused two-matmul apply vs the pure-jnp oracle."""
+    from repro.kernels.mlp_apply import mlp_apply
+    from repro.kernels.mlp_apply.ref import mlp_apply_ref
+    S = jnp.asarray(RNG.normal(size=(R, Din)), jnp.float32)
+    M = jnp.asarray(RNG.normal(size=(R, Din)), jnp.float32)
+    hp = jnp.asarray(RNG.normal(size=(R, Din)), jnp.float32)
+    k = jnp.asarray(RNG.integers(0, 6, size=R), jnp.float32)
+    eps = jnp.float32(0.37)
+    W1 = jnp.asarray(RNG.normal(size=(Din, Dh)), jnp.float32)
+    b1 = jnp.asarray(RNG.normal(size=Dh), jnp.float32)
+    W2 = jnp.asarray(RNG.normal(size=(Dh, Dout)), jnp.float32)
+    b2 = jnp.asarray(RNG.normal(size=Dout), jnp.float32)
+    Sn, h = mlp_apply(S, M, hp, k, eps, W1, b1, W2, b2, mean=mean, relu=relu)
+    Sr, hr = mlp_apply_ref(S, M, hp, k, eps, W1, b1, W2, b2,
+                           mean=mean, relu=relu)
+    np.testing.assert_allclose(Sn, Sr, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(h, hr, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 @pytest.mark.parametrize("V,B,hot,d", [(100, 8, 1, 16), (1000, 32, 4, 64),
                                        (5000, 16, 8, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
