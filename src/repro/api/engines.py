@@ -168,6 +168,17 @@ class DeviceAdapter:
         """Drain the async pipeline (no-op when synchronous)."""
         self._impl.flush()
 
+    def enable_commit_log(self) -> None:
+        """Serving layer: record per-commit final-layer patches (captured
+        at resolve time, after the gated commit is known to have landed)."""
+        self._impl.enable_commit_log()
+
+    def drain_commits(self) -> list:
+        """Serving layer: pop [(commit_idx, affected, H_final_rows)] in
+        commit order; the async pipeline's in-flight batch is excluded
+        until its resolve."""
+        return self._impl.drain_commits()
+
     @property
     def impl(self) -> DeviceEngine:
         """The underlying engine (mirror counters, ladder stats) for

@@ -34,6 +34,7 @@ from repro.core.workloads import Workload, make_workload
 from repro.data.streams import UpdateStream, make_stream, snapshot_split
 
 from .registry import Engine, UpdateResult, canonical_name, make_engine
+from repro.serve.scheduler import LatencyModel
 
 _GRAPH_GENS = {"er": erdos_renyi, "powerlaw": powerlaw_graph}
 
@@ -198,10 +199,12 @@ class InferenceSession:
 
         ``updates`` may be an ``UpdateBatch``, an ``UpdateStream``, a single
         update, or any (nested) iterable of these.  When ``deadline_ms`` is
-        set, the micro-batch size halves whenever a batch blows the budget
-        and doubles back (up to the requested size) while comfortably under
-        it.  Every micro-batch is journaled write-ahead and counted in
-        ``self.step`` so checkpoint + replay compose exactly.
+        set, each micro-batch is sized by an online affine latency model
+        (:class:`repro.serve.scheduler.LatencyModel`, EWMA over observed
+        per-batch latency vs. batch size): the largest batch predicted to
+        fit the budget, clamped to the requested ``batch_size``.  Every
+        micro-batch is journaled write-ahead and counted in ``self.step``
+        so checkpoint + replay compose exactly.
 
         ``keep_results=False`` drops the per-batch ``UpdateResult`` objects
         (latency floats are always kept) — use it for long-running serving
@@ -211,32 +214,25 @@ class InferenceSession:
         deadline = self.deadline_ms if deadline_ms is None else deadline_ms
         flat = _flatten(updates)
         max_bs = batch_size or max(len(flat), 1)
+        model = LatencyModel()
         bs = max_bs
         report = IngestReport(final_batch_size=bs)
         t_start = time.perf_counter()
         i = 0
         while i < len(flat):
+            if deadline:
+                bs = model.batch_for(deadline * 1e-3, hi=max_bs)
             chunk = flat[i:i + bs]
             i += len(chunk)
-            batch = _to_batch(chunk)
-            if self.journal:
-                self.journal.append(batch)
             t0 = time.perf_counter()
-            res = self.engine.apply_batch(batch)
+            res = self.apply_one(_to_batch(chunk))
             dt = time.perf_counter() - t0
-            self.step += 1
-            if self._ckpt and self.step % self._ckpt.every == 0:
-                self.checkpoint()
+            model.observe(len(chunk), dt)
             report.latencies.append(dt)
             if keep_results:
                 report.results.append(res)
-            report.n_updates += len(batch)
+            report.n_updates += len(chunk)
             report.n_batches += 1
-            if deadline:
-                if dt * 1e3 > deadline and bs > 1:
-                    bs = max(1, bs // 2)
-                elif dt * 1e3 < deadline / 4 and bs < max_bs:
-                    bs = min(max_bs, bs * 2)
         # pipelined engines (device async_dispatch) may still have a batch
         # in flight; drain it so throughput accounting is honest
         flush = getattr(self.engine, "flush", None)
@@ -245,6 +241,20 @@ class InferenceSession:
         report.wall_seconds = time.perf_counter() - t_start
         report.final_batch_size = bs
         return report
+
+    def apply_one(self, batch: UpdateBatch) -> UpdateResult:
+        """Journal + apply one pre-formed micro-batch: the single commit
+        point shared by ``ingest`` and the serving layer's worker.  No
+        batching policy and no flush — a pipelined engine may still hold
+        this batch in flight when the call returns.
+        """
+        if self.journal:
+            self.journal.append(batch)
+        res = self.engine.apply_batch(batch)
+        self.step += 1
+        if self._ckpt and self.step % self._ckpt.every == 0:
+            self.checkpoint()
+        return res
 
     # -- query ------------------------------------------------------------
     def query(self, vertices=None) -> np.ndarray:

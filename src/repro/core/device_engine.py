@@ -827,6 +827,8 @@ class DeviceEngine:
         self.retries = 0        # overflow retries across the stream
         self._pending = None    # (ovf, final, sizes, stats, batch, caps, k)
         self._last_affected = np.empty(0, dtype=np.int64)
+        self._commit_log = None   # serving: [(commit_idx, affected, rows)]
+        self._commits = 0         # batches committed since log enabled
         self.last_shrink_events = 0
         self.last_rows_reaggregated = 0
         self.last_dims_reaggregated = 0
@@ -1042,6 +1044,32 @@ class DeviceEngine:
             np.testing.assert_allclose(np.asarray(self.state.k), k_check,
                                        err_msg="device k drifted from host "
                                                "in-degree")
+        if self._commit_log is not None:
+            # committed-snapshot handle for the serving layer: the batch is
+            # now irrevocably committed (overflow flag forced above, gated
+            # writes landed), so gather exactly its final-layer rows to the
+            # host before the *next* dispatch can donate these buffers away.
+            # The gather index is padded to a power-of-two bucket so the jit
+            # compiles O(log n) programs, not one per distinct frontier size
+            self._commits += 1
+            aff = self._last_affected
+            if not aff.size:
+                rows = np.zeros((0, int(self.state.H[-1].shape[1])),
+                                np.float32)
+            elif jax.default_backend() == "cpu":
+                # host backend: np.asarray is ~zero-copy, a device gather
+                # dispatch costs ~100x more than indexing on the host
+                rows = np.asarray(self.state.H[-1])[aff]
+            else:
+                # accelerator: gather only the frontier rows, padding the
+                # index to a power-of-two bucket so the jit compiles
+                # O(log n) programs, not one per distinct frontier size
+                cap = self._next_bucket(aff.size)
+                idx = np.full(cap, aff[0], dtype=np.int64)
+                idx[:aff.size] = aff
+                rows = np.asarray(self.state.H[-1][jnp.asarray(idx)])
+                rows = rows[:aff.size]
+            self._commit_log.append((self._commits, aff.copy(), rows))
         self._pending = None
         return self._last_affected
 
@@ -1067,6 +1095,26 @@ class DeviceEngine:
     def flush(self) -> np.ndarray:
         """Drain the pipeline (resolve any in-flight batch)."""
         return self._resolve()
+
+    # -- committed-snapshot handle (serving layer) -------------------------
+    def enable_commit_log(self) -> None:
+        """Start recording, per committed batch, the (affected ids, final-
+        layer rows) patch — captured at resolve time, i.e. the instant the
+        gated commit is known to have landed, so the serving layer can
+        publish snapshots that trail the async pipeline without ever
+        observing a half-committed batch."""
+        self._resolve()          # batches already in flight predate the log
+        self._commit_log = []
+
+    def drain_commits(self) -> list:
+        """Return + clear the commits recorded since the last drain, in
+        commit order: ``[(commit_idx, affected_ids, H_final_rows)]``.  Does
+        NOT force the in-flight batch — an async engine's latest batch
+        appears only after its resolve (or ``flush``)."""
+        if self._commit_log is None:
+            raise RuntimeError("enable_commit_log() first")
+        out, self._commit_log = self._commit_log, []
+        return out
 
     # -- test helpers -----------------------------------------------------
     def host_H(self) -> list[np.ndarray]:

@@ -1,6 +1,9 @@
-"""Serving driver: prefill + batched decode on a reduced LM config.
+"""LM serving driver: prefill + batched decode on a reduced LM config.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b --tokens 16
+(Graph serving lives in ``repro.serve`` — this is the language-model
+side-quest driver, hence the ``lm_`` prefix.)
+
+    PYTHONPATH=src python -m repro.launch.lm_serve --arch phi4-mini-3.8b --tokens 16
 """
 from __future__ import annotations
 
