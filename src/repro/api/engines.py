@@ -298,6 +298,19 @@ _DIST_OPTIONS = (
                  "reaches the multi-pod geometry from launch/mesh.py"),
     EngineOption("seed", 0, "LDG partitioner seed"),
     EngineOption("min_bucket", 32, "smallest static buffer capacity"),
+    EngineOption("donate", True,
+                 "donate the mesh H/S/C buffers through the jitted "
+                 "propagate so XLA updates them in place; the gated commit "
+                 "keeps overflow retries bit-exact (disable for A/B "
+                 "equivalence checks against the copying path)"),
+    EngineOption("async_dispatch", False,
+                 "overlap host routing/packing of batch t+1 with mesh "
+                 "compute of batch t; the overflow flag is checked lazily "
+                 "and ``apply_batch`` reports the previous batch's affected "
+                 "ids (flush()/sync() drain exactly)"),
+    EngineOption("warm", True,
+                 "precompile the rung-0 cap schedule at construction via a "
+                 "sentinel no-op batch"),
 )
 
 
@@ -321,26 +334,35 @@ class DistAdapter:
                  graph: DynamicGraph, state: InferenceState, *,
                  mesh=None, mode: str = "ripple",
                  data_axes: tuple = ("data",), seed: int = 0,
-                 min_bucket: int = 32):
+                 min_bucket: int = 32, donate: bool = True,
+                 async_dispatch: bool = False, warm: bool = True):
         if mesh is None:
             from repro.launch.mesh import make_local_mesh
             mesh = make_local_mesh(data=jax.device_count(), model=1)
         self._host = state
+        self._async = async_dispatch
         self._impl = DistEngine(workload, params, graph, state, mesh,
                                 mode=mode, data_axes=tuple(data_axes),
-                                seed=seed, min_bucket=min_bucket)
+                                seed=seed, min_bucket=min_bucket,
+                                donate=donate, async_dispatch=async_dispatch,
+                                warm=warm)
 
     def apply_batch(self, batch: UpdateBatch) -> UpdateResult:
         t0 = time.perf_counter()
-        affected = self._impl.apply_batch(batch)  # blocks on mesh state
+        affected = self._impl.apply_batch(batch)
+        comm = self._impl.last_comm  # None until the first resolve (async)
         return UpdateResult(
             affected=affected,
             wall_seconds=time.perf_counter() - t0,
-            messages_per_hop=[int(c) for c in self._impl.last_comm],
+            messages_per_hop=[] if comm is None else [int(c) for c in comm],
             shrink_events=self._impl.last_shrink_events,
             rows_reaggregated=self._impl.last_rows_reaggregated,
             dims_reaggregated=self._impl.last_dims_reaggregated,
             recover_hits=self._impl.last_recover_hits)
+
+    def flush(self) -> None:
+        """Drain the async pipeline (no-op when synchronous)."""
+        self._impl.flush()
 
     def sync(self) -> InferenceState:
         return self._impl.gather_state(self._host)
@@ -372,7 +394,9 @@ class DistRCAdapter(DistAdapter):
     def __init__(self, workload: Workload, params: list,
                  graph: DynamicGraph, state: InferenceState, *,
                  mesh=None, data_axes: tuple = ("data",), seed: int = 0,
-                 min_bucket: int = 32):
+                 min_bucket: int = 32, donate: bool = True,
+                 async_dispatch: bool = False, warm: bool = True):
         super().__init__(workload, params, graph, state, mesh=mesh,
                          mode="rc", data_axes=data_axes, seed=seed,
-                         min_bucket=min_bucket)
+                         min_bucket=min_bucket, donate=donate,
+                         async_dispatch=async_dispatch, warm=warm)

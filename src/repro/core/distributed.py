@@ -19,6 +19,29 @@ Mapping of the paper's MPI/BSP design onto JAX (DESIGN.md §2, §5):
  - All buffers have static capacities; overflow is detected exactly and the
    host retries on the next bucket (never silent truncation).
 
+Warm-path contracts (the device engine's playbook, ported to the mesh):
+
+ - **One collective per hop.**  Destination ids ride the halo exchange as
+   an extra float32 channel (exact below 2^24), so the id+value pair costs
+   a single fused ``all_to_all`` instead of two; the pull request path is
+   fused the same way and its response is a single value-only collective.
+ - **Gated commit.**  Every propagate runs to completion uncondition­ally,
+   then commits its state outputs through one overflow gate reduced over
+   *all* mesh axes (data AND model — per-dim pull overflow can differ
+   between model shards, and a disagreeing gate would tear rows apart).
+   On overflow the returned H/S/C bit-exactly equal the inputs, which is
+   what makes ``donate_argnums`` retries safe: the host re-dispatches with
+   the returned buffers and larger caps, never re-uploading state.
+ - **Size feedback.**  Each hop reports its true needed sizes
+   ``[rows, edges, halo, pull, pairs]`` (valid even when the attempt
+   overflowed), so the host's cap ladder aims the retry directly at
+   fitting power-of-two buckets and the steady state stops recompiling.
+ - **Hierarchical multipod halo.**  With ``data_axes=("pod", "data")`` the
+   invertible halo runs in two stages: an intra-pod shuffle to the
+   destination's data slot, a combine of co-destined deltas, then the
+   cross-pod exchange — so duplicate deltas are merged *before* they cross
+   the expensive inter-pod links (``xpod`` reports slots before/after).
+
 The routed-batch convention follows §5.2: an update is assigned to the
 owner of its hop-0 (source) vertex; the in-degree vector (the "no-compute"
 topology sync for cut edges) is refreshed globally by the host router.
@@ -40,6 +63,8 @@ from .device_engine import _compact_mailbox, _masked_pairs
 from .graph import DynamicGraph
 from .partition import Partitioning, ldg_partition
 from .workloads import Workload
+
+_F32_EXACT = 1 << 24   # ids ride collectives as float32 below this
 
 
 # ---------------------------------------------------------------------------
@@ -96,19 +121,88 @@ def _pack_by_partition(n_parts: int, n_local: int, cap: int,
     """
     n_pad = n_parts * n_local
     part = jnp.where(dst_global < n_pad, dst_global // n_local, n_parts)
-    order = jnp.argsort(part)
-    sp = part[order]
-    sl = (dst_global % n_local)[order]
-    sv = vals[order]
-    first_pos = jnp.searchsorted(sp, sp, side="left")
-    pos = jnp.arange(sp.shape[0], dtype=jnp.int32) - first_pos.astype(jnp.int32)
-    counts = jax.ops.segment_sum(jnp.ones_like(sp), sp, num_segments=n_parts + 1)[:n_parts]
+    return _pack_buckets(n_parts, cap, part, dst_global % n_local, n_local,
+                         vals)
+
+
+def _pack_buckets(n_buckets: int, cap: int, bucket: jax.Array,
+                  key: jax.Array, key_sentinel: int, vals: jax.Array):
+    """Route a (bucket, key, value) stream into ``[n_buckets, cap]`` buffers
+    (``bucket == n_buckets`` drops the entry; key slots pad with
+    ``key_sentinel``).
+
+    The per-bucket slot of each entry is its running occurrence count,
+    computed from a one-hot cumulative sum — no argsort, and crucially no
+    permutation of the d-wide value payload (values scatter straight from
+    their source position).  Entries keep stream order within a bucket,
+    matching what a stable sort-by-bucket would produce.  The one-hot
+    matrix is [N, n_buckets+1] ints, fine for mesh-sized bucket counts; a
+    sort fallback covers the (unused today) many-bucket regime.
+    """
+    if n_buckets > 64:
+        return _pack_buckets_sorted(n_buckets, cap, bucket, key,
+                                    key_sentinel, vals)
+    oh = (bucket[:, None]
+          == jnp.arange(n_buckets + 1, dtype=bucket.dtype)[None, :])
+    run = jnp.cumsum(oh.astype(jnp.int32), axis=0)
+    pos = jnp.take_along_axis(run, bucket[:, None].astype(jnp.int32),
+                              axis=1)[:, 0] - 1
+    counts = run[-1, :n_buckets]
     overflow = jnp.any(counts > cap)
-    ids = jnp.full((n_parts, cap), n_local, dtype=jnp.int32)
-    ids = ids.at[sp, pos].set(sl.astype(jnp.int32), mode="drop")
-    buf = jnp.zeros((n_parts, cap) + vals.shape[1:], dtype=vals.dtype)
-    buf = buf.at[sp, pos].set(sv, mode="drop")
-    return ids, buf, counts, overflow
+    keys = jnp.full((n_buckets, cap), key_sentinel, dtype=jnp.int32)
+    keys = keys.at[bucket, pos].set(key.astype(jnp.int32), mode="drop")
+    buf = jnp.zeros((n_buckets, cap) + vals.shape[1:], dtype=vals.dtype)
+    buf = buf.at[bucket, pos].set(vals, mode="drop")
+    return keys, buf, counts, overflow
+
+
+def _pack_buckets_sorted(n_buckets: int, cap: int, bucket: jax.Array,
+                         key: jax.Array, key_sentinel: int, vals: jax.Array):
+    """Sort-based :func:`_pack_buckets` for bucket counts where the one-hot
+    running-count matrix would dominate."""
+    order = jnp.argsort(bucket)
+    sb = bucket[order]
+    sk = key[order]
+    sv = vals[order]
+    first_pos = jnp.searchsorted(sb, sb, side="left")
+    pos = jnp.arange(sb.shape[0], dtype=jnp.int32) - first_pos.astype(jnp.int32)
+    counts = jax.ops.segment_sum(jnp.ones_like(sb), sb,
+                                 num_segments=n_buckets + 1)[:n_buckets]
+    overflow = jnp.any(counts > cap)
+    keys = jnp.full((n_buckets, cap), key_sentinel, dtype=jnp.int32)
+    keys = keys.at[sb, pos].set(sk.astype(jnp.int32), mode="drop")
+    buf = jnp.zeros((n_buckets, cap) + vals.shape[1:], dtype=vals.dtype)
+    buf = buf.at[sb, pos].set(sv, mode="drop")
+    return keys, buf, counts, overflow
+
+
+def _compact(n: int, all_dst: jax.Array, all_val: jax.Array, r_cap: int):
+    """Recipient compaction sized to the regime: the distributed mailbox is
+    usually much larger than the per-shard row space (n_parts * halo_cap
+    slots landing on n_local rows), where a presence mask + scatter-add is
+    far cheaper than the sort in :func:`_compact_mailbox`; small mailboxes
+    keep the sort (O(N log N), independent of n)."""
+    if all_dst.shape[0] < n // 2:
+        return _compact_mailbox(n, all_dst, all_val, r_cap)
+    cl = jnp.minimum(all_dst, n)
+    acc = jnp.zeros((n + 1,) + all_val.shape[1:], all_val.dtype).at[cl].add(
+        all_val)
+    mask = jnp.zeros((n + 1,), bool).at[cl].set(True)
+    n_rec = mask[:n].sum()
+    rec_idx = jnp.nonzero(mask[:n], size=r_cap, fill_value=n)[0].astype(
+        jnp.int32)
+    valid = (rec_idx < n).reshape((-1,) + (1,) * (all_val.ndim - 1))
+    mailbox = jnp.where(valid, acc[jnp.minimum(rec_idx, n - 1)], 0)
+    return rec_idx, mailbox, n_rec
+
+
+def _per_hop(cap, n_hops: int) -> tuple:
+    """Normalize a capacity knob (one int, or one per hop) to a tuple."""
+    if isinstance(cap, (tuple, list)):
+        if len(cap) != n_hops:
+            raise ValueError(f"expected {n_hops} per-hop caps, got {cap}")
+        return tuple(int(c) for c in cap)
+    return (int(cap),) * n_hops
 
 
 def _exchange(ids: jax.Array, vals: jax.Array, axis="data"):
@@ -116,6 +210,18 @@ def _exchange(ids: jax.Array, vals: jax.Array, axis="data"):
     rid = jax.lax.all_to_all(ids, axis, split_axis=0, concat_axis=0, tiled=True)
     rval = jax.lax.all_to_all(vals, axis, split_axis=0, concat_axis=0, tiled=True)
     return rid, rval
+
+
+def _exchange_fused(ids: jax.Array, vals: jax.Array, axis, fuse: bool):
+    """Halo exchange as ONE fused collective: the id channel rides the value
+    buffer as float32 (exact below 2^24 — ``fuse`` is the static guard).
+    Falls back to the two-collective :func:`_exchange` above the id bound."""
+    if not fuse:
+        return _exchange(ids, vals, axis)
+    packed = jnp.concatenate([ids[..., None].astype(vals.dtype), vals], axis=2)
+    r = jax.lax.all_to_all(packed, axis, split_axis=0, concat_axis=0,
+                           tiled=True)
+    return r[..., 0].astype(jnp.int32), r[..., 1:]
 
 
 def _pull_in_neighbors(n_parts: int, n_local: int, n_pad: int, dax, me,
@@ -127,10 +233,15 @@ def _pull_in_neighbors(n_parts: int, n_local: int, n_pad: int, dax, me,
     SHRINK-only re-aggregation requests.
 
     ``aff_c [r_cap]`` are clamped local row ids, ``degs [r_cap]`` their
-    pull counts (0 skips a row).  Returns (got [pull_cap, d] pulled values
-    aligned with the expansion, src_g [pull_cap] global source ids, fid
-    [pull_cap] row slot per pulled edge, evalid [pull_cap], ew [pull_cap]
-    edge weights, comm_req globally-summed remote request slots, overflow).
+    pull counts (0 skips a row).  Two collectives total: the request ships
+    (id, slot) fused, the response ships values only (block layout is
+    preserved by the tiled all_to_all round trip, so reply row p aligns
+    position-wise with the requests packed for owner p).  Returns (got
+    [pull_cap, d] pulled values aligned with the expansion, src_g
+    [pull_cap] global source ids, fid [pull_cap] row slot per pulled edge,
+    evalid [pull_cap], ew [pull_cap] edge weights, comm_req
+    globally-summed remote request slots, needed true lane/bucket size,
+    overflow).
     """
     csum = jnp.cumsum(degs)
     total = csum[-1]
@@ -148,21 +259,21 @@ def _pull_in_neighbors(n_parts: int, n_local: int, n_pad: int, dax, me,
         n_parts, n_local, pull_cap, src_g,
         jnp.arange(pull_cap, dtype=jnp.float32)[:, None])
     comm_req = jax.lax.psum(counts.sum() - counts[me], dax)
-    r_req, _ = _exchange(req_ids, req_slot, dax)
+    r_req, _ = _exchange_fused(req_ids, req_slot, dax, n_local < _F32_EXACT)
     vals_resp = h_l[jnp.minimum(r_req, n_local - 1)] \
         * (r_req < n_local)[..., None]
-    # respond: send values straight back (reverse exchange); block layout
-    # is preserved, so row p of the reply aligns position-wise with the
-    # requests originally packed for owner p
-    _, back_vals = _exchange(r_req, vals_resp, dax)
+    # respond: send values straight back (reverse exchange, values only)
+    back_vals = jax.lax.all_to_all(vals_resp, dax, split_axis=0,
+                                   concat_axis=0, tiled=True)
     # place returned values into their pull slots (my original buffers)
     slot = req_slot[..., 0].astype(jnp.int32).reshape(-1)
     filled = (req_ids < n_local).reshape(-1)
     got = jnp.zeros((pull_cap,) + h_l.shape[1:], h_l.dtype)
     got = got.at[jnp.where(filled, slot, pull_cap)].set(
         back_vals.reshape((-1,) + back_vals.shape[2:]), mode="drop")
+    needed = jnp.maximum(total, counts.max()).astype(jnp.int32)
     overflow = (total > pull_cap) | ovf
-    return got, src_g, fid, evalid, ew, comm_req, overflow
+    return got, src_g, fid, evalid, ew, comm_req, needed, overflow
 
 
 def _pull_in_neighbor_dims(n_parts: int, n_local: int, n_pad: int, dax, me,
@@ -175,13 +286,13 @@ def _pull_in_neighbor_dims(n_parts: int, n_local: int, n_pad: int, dax, me,
     ``rows_c [pd_cap]`` are clamped local row ids of the (row, dim) pairs
     being re-derived, ``dims [pd_cap]`` their local feature dims, ``degs
     [pd_cap]`` the per-pair pull counts (0 skips a pair).  Each pulled lane
-    requests ONE scalar ``H[src, dim]`` from the source's owner — request
-    slots carry (lane, dim), response slots carry a single float32 instead
-    of a d_loc-wide row, which is where the shrink-pull comm drops from
-    row-sized to dim-masked payloads.  Returns (got [pull_cap] scalar
+    requests ONE scalar ``H[src, dim]`` from the source's owner — the fused
+    request slot carries (id, lane, dim), the response a single float32
+    instead of a d_loc-wide row, which is where the shrink-pull comm drops
+    from row-sized to dim-masked payloads.  Returns (got [pull_cap] scalar
     values, src_g [pull_cap] global source ids, fid [pull_cap] pair slot
     per lane, evalid [pull_cap], comm_req globally-summed remote request
-    slots, overflow).
+    slots, needed true lane/bucket size, overflow).
     """
     csum = jnp.cumsum(degs)
     total = csum[-1]
@@ -201,17 +312,20 @@ def _pull_in_neighbor_dims(n_parts: int, n_local: int, n_pad: int, dax, me,
     req_ids, req_pay, counts, ovf = _pack_by_partition(
         n_parts, n_local, pull_cap, src_g, payload)
     comm_req = jax.lax.psum(counts.sum() - counts[me], dax)
-    r_req, r_pay = _exchange(req_ids, req_pay, dax)
+    r_req, r_pay = _exchange_fused(req_ids, req_pay, dax,
+                                   n_local < _F32_EXACT)
     rdim = jnp.clip(r_pay[..., 1].astype(jnp.int32), 0, h_l.shape[1] - 1)
     scal = h_l[jnp.minimum(r_req, n_local - 1), rdim] * (r_req < n_local)
-    _, back = _exchange(r_req, scal[..., None], dax)
+    back = jax.lax.all_to_all(scal[..., None], dax, split_axis=0,
+                              concat_axis=0, tiled=True)
     slot = req_pay[..., 0].astype(jnp.int32).reshape(-1)
     filled = (req_ids < n_local).reshape(-1)
     got = jnp.zeros((pull_cap,), h_l.dtype)
     got = got.at[jnp.where(filled, slot, pull_cap)].set(
         back.reshape(-1), mode="drop")
+    needed = jnp.maximum(total, counts.max()).astype(jnp.int32)
     overflow = (total > pull_cap) | ovf
-    return got, src_g, fid, evalid, comm_req, overflow
+    return got, src_g, fid, evalid, comm_req, needed, overflow
 
 
 def _local_frontier_messages(n_local: int, n_pad: int, h_l: jax.Array,
@@ -284,27 +398,94 @@ class DistCSR(NamedTuple):
     length: jax.Array  # [P, n_local]
 
 
+def _gated_commit(ok, new, old):
+    """Commit ``new`` when the globally-agreed gate holds, else bit-exactly
+    return ``old`` — the overflow-retry contract under buffer donation."""
+    return jax.tree.map(lambda a, b: jnp.where(ok, a, b), new, old)
+
+
 def make_ripple_propagate(mesh, workload: Workload, n_local: int,
-                          caps: tuple, halo_cap: int,
-                          data_axes: tuple = ("data",)):
+                          caps: tuple, halo_cap,
+                          data_axes: tuple = ("data",), *,
+                          donate: bool = False):
     """Build the jitted distributed propagate for a fixed geometry.
 
     ``data_axes`` lets the vertex-partition dimension span multiple mesh
     axes — e.g. ("pod", "data") partitions over 32 ways on the multi-pod
-    mesh (halo all_to_all then crosses the DCI for pod-remote partitions).
+    mesh.  With exactly two data axes (and ids exact in float32) the halo
+    runs hierarchically: intra-pod shuffle -> combine co-destined deltas ->
+    cross-pod exchange, so duplicate deltas never cross the DCI.
+
+    ``halo_cap`` may be one capacity or a per-hop tuple — early hops carry
+    far fewer deltas than late ones, and the receive-side mailbox work
+    scales with n_parts * halo_cap, so per-hop sizing matters.
+
+    With ``donate=True`` the H/S state buffers are donated through the jit;
+    the gated commit keeps overflow retries bit-exact (outputs == inputs).
+
+    Returns ``(H, S, final, ovf, comm [L], sizes [L, 5], xpod [2])``.
     """
     import math
     n_parts = math.prod(mesh.shape[a] for a in data_axes)
     dax = data_axes if len(data_axes) > 1 else data_axes[0]
+    allax = tuple(data_axes) + ("model",)
     n_pad = n_parts * n_local
+    fuse = n_local < _F32_EXACT
+    hier = len(data_axes) == 2 and n_pad < _F32_EXACT
+    if hier:
+        pod_ax, leaf_ax = data_axes
+        Np, Nd = mesh.shape[pod_ax], mesh.shape[leaf_ax]
     spec = workload.spec
     L = spec.n_layers
+    halo_caps = _per_hop(halo_cap, L)
+    zero = jnp.zeros((), jnp.int32)
+
+    def halo(dst_g, vals, me, hc):
+        """One halo step at capacity ``hc``: returns (mdst local ids, mval,
+        remote-slot count, xpod [before, after], needed bucket size,
+        overflow)."""
+        if not hier:
+            ids, buf, counts, ovf = _pack_by_partition(
+                n_parts, n_local, hc, dst_g, vals)
+            rid, rval = _exchange_fused(ids, buf, dax, fuse)
+            remote = counts.sum() - counts[me]
+            return (rid.reshape(-1), rval.reshape((-1,) + rval.shape[2:]),
+                    remote, jnp.zeros((2,), jnp.int32),
+                    counts.max().astype(jnp.int32), ovf)
+        me_p = jax.lax.axis_index(pod_ax)
+        me_d = jax.lax.axis_index(leaf_ax)
+        valid = dst_g < n_pad
+        part = jnp.where(valid, dst_g // n_local, n_parts)
+        cross_before = (valid & (part // Nd != me_p)).sum().astype(jnp.int32)
+        # stage 1: intra-pod shuffle to the destination's data slot
+        b1 = jnp.where(valid, part % Nd, Nd)
+        k1, v1, c1, ovf = _pack_buckets(Nd, hc, b1, dst_g, n_pad, vals)
+        r1, rv1 = _exchange_fused(k1, v1, leaf_ax, True)
+        # combine co-destined deltas before they cross pods
+        g1, m1, n1 = _compact(
+            n_pad, r1.reshape(-1), rv1.reshape((-1,) + rv1.shape[2:]),
+            hc)
+        ovf |= n1 > hc
+        # stage 2: cross-pod exchange to the destination's pod
+        b2 = jnp.where(g1 < n_pad, g1 // (n_local * Nd), Np)
+        k2, v2, c2, ovf2 = _pack_buckets(Np, hc, b2, g1 % n_local,
+                                         n_local, m1)
+        ovf |= ovf2
+        r2, rv2 = _exchange_fused(k2, v2, pod_ax, True)
+        intra = c1.sum() - c1[me_d]
+        cross_after = (c2.sum() - c2[me_p]).astype(jnp.int32)
+        needed = jnp.maximum(jnp.maximum(c1.max(), n1),
+                             c2.max()).astype(jnp.int32)
+        return (r2.reshape(-1), rv2.reshape((-1,) + rv2.shape[2:]),
+                intra + cross_after,
+                jnp.stack([cross_before, cross_after]), needed, ovf)
 
     def local_fn(params, H, S, k, csr: DistCSR, batch: DistBatch):
         # strip the leading data-axis block dim (=1 per shard)
         sq = lambda t: jax.tree.map(lambda a: a[0], t)
         H, S, k, csr, batch = sq(H), sq(S), sq(k), sq(csr), sq(batch)
         me = jax.lax.axis_index(dax)
+        H_in, S_in = H, S
 
         # hop 0: feature updates (values arrive model-sharded)
         fv = batch.feat_idx
@@ -313,7 +494,8 @@ def make_ripple_propagate(mesh, workload: Workload, n_local: int,
         H = (H[0].at[fv].set(batch.feat_val, mode="drop"),) + H[1:]
         frontier = fv
         overflow = jnp.zeros((), bool)
-        comm = []
+        comm, sizes = [], []
+        xpod = jnp.zeros((2,), jnp.int32)
 
         for l in range(L):
             r_cap, e_cap = caps[l]
@@ -325,17 +507,18 @@ def make_ripple_propagate(mesh, workload: Workload, n_local: int,
                 weighted=spec.weighted, self_dep=spec.self_dependent,
                 e_cap=e_cap, my_part=me)
             overflow |= needed > e_cap
-            ids, buf, counts, ovf = _pack_by_partition(
-                n_parts, n_local, halo_cap, dst_g, vals)
+            mdst, mval, remote, xp, h_need, ovf = halo(dst_g, vals, me,
+                                                       halo_caps[l])
             overflow |= ovf
+            xpod = xpod + xp
             # comm accounting: slots destined to OTHER partitions
-            remote = counts.sum() - counts[me]
             comm.append(jax.lax.psum(remote, dax))
-            rid, rval = _exchange(ids, buf, dax)
-            rec_idx, mailbox, n_rec = _compact_mailbox(
-                n_local, rid.reshape(-1), rval.reshape((-1,) + rval.shape[2:]),
-                r_cap)
+            rec_idx, mailbox, n_rec = _compact(
+                n_local, mdst, mval, r_cap)
             overflow |= n_rec > r_cap
+            sizes.append(jnp.stack([n_rec.astype(jnp.int32),
+                                    needed.astype(jnp.int32),
+                                    h_need, zero, zero]))
 
             aff_c = jnp.minimum(rec_idx, n_local - 1)
             valid = (rec_idx < n_local)[:, None]
@@ -352,10 +535,17 @@ def make_ripple_propagate(mesh, workload: Workload, n_local: int,
             S = S[: l + 1] + (S_next,) + S[l + 2:]
             frontier = rec_idx
 
+        # gated commit: one overflow verdict over EVERY mesh axis; on
+        # overflow the outputs bit-exactly equal the inputs (donation-safe)
+        ovf_g = jax.lax.psum(overflow.astype(jnp.float32), allax)
+        ok = ovf_g == 0
+        H = _gated_commit(ok, H, H_in)
+        S = _gated_commit(ok, S, S_in)
+        final = jnp.where(ok, frontier, n_local)
+        sz = jax.lax.pmax(jnp.stack(sizes), allax)
         add_back = lambda t: jax.tree.map(lambda a: a[None], t)
-        ovf_g = jax.lax.psum(overflow.astype(jnp.float32), dax)
-        return (add_back(H), add_back(S), add_back(frontier),
-                ovf_g, jnp.stack(comm))
+        return (add_back(H), add_back(S), add_back(final),
+                ovf_g, jnp.stack(comm), sz, jax.lax.psum(xpod, dax))
 
     state_spec_h = tuple(P(dax, None, "model") for _ in range(L + 1))
     state_spec_s = (P(dax, None),) + tuple(P(dax, None, "model")
@@ -370,9 +560,10 @@ def make_ripple_propagate(mesh, workload: Workload, n_local: int,
         local_fn, mesh=mesh,
         in_specs=(tp_param_specs(workload), state_spec_h, state_spec_s,
                   P(dax, None), csr_spec, batch_spec),
-        out_specs=(state_spec_h, state_spec_s, P(dax, None), P(), P()),
+        out_specs=(state_spec_h, state_spec_s, P(dax, None), P(), P(), P(),
+                   P()),
         check_vma=False)
-    return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=(1, 2)) if donate else jax.jit(fn)
 
 
 # ---------------------------------------------------------------------------
@@ -380,10 +571,10 @@ def make_ripple_propagate(mesh, workload: Workload, n_local: int,
 # + shrink re-aggregation pulls (see core/aggregators.py for the algebra)
 # ---------------------------------------------------------------------------
 def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
-                             caps: tuple, halo_cap: int, pull_cap: int,
+                             caps: tuple, halo_cap, pull_cap: int,
                              pd_cap: int = 0,
                              data_axes: tuple = ("data",), *,
-                             rc: bool = False):
+                             rc: bool = False, donate: bool = False):
     """Distributed GROW/SHRINK propagation for max/min workloads.
 
     Mailboxes ship *candidate extrema* (value + global source id + delete
@@ -397,20 +588,24 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
     pulled elements).  Because the feature dims are sharded over the model
     axis, each model shard re-derives exactly its own shrunk dims — no
     cross-model reduction is needed for the shrink masks, only for the
-    row-level propagation decisions.  This is the communication contrast
-    ``dist_bench`` measures against ``rc=True`` (the unfiltered baseline:
-    every affected row re-aggregates a full row via the row-sized pull
-    path and the frontier never filters, i.e. distributed RC for the
-    monotonic family).
+    row-level propagation decisions *and the overflow gate* (a per-dim
+    pull can overflow on one model shard only; the gated commit must
+    agree).  This is the communication contrast ``dist_bench`` measures
+    against ``rc=True`` (the unfiltered baseline: every affected row
+    re-aggregates a full row via the row-sized pull path and the frontier
+    never filters, i.e. distributed RC for the monotonic family).
 
     Contributor ids ride the halo exchange as float32 payload channels, so
     the relabeled id space must stay below 2^24 (exact float32 integers).
+
+    Returns ``(H, S, C, final, ovf, comm [3L], sstats [4], sizes [L, 5])``.
     """
     import math
     n_parts = math.prod(mesh.shape[a] for a in data_axes)
     dax = data_axes if len(data_axes) > 1 else data_axes[0]
+    allax = tuple(data_axes) + ("model",)
     n_pad = n_parts * n_local
-    if n_pad >= 1 << 24:
+    if n_pad >= _F32_EXACT:
         raise ValueError(
             f"monotonic propagate: padded id space {n_pad} exceeds 2^24 — "
             "contributor ids ride the halo as float32 and would lose "
@@ -419,6 +614,7 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
     agg = workload.agg
     sign = agg.sign
     L = spec.n_layers
+    halo_caps = _per_hop(halo_cap, L)
 
     def local_fn(params, H, S, C, k, out_csr: DistCSR, in_csr: DistCSR,
                  batch: DistBatch):
@@ -426,6 +622,7 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
         H, S, C, k, out_csr, in_csr, batch = (
             sq(H), sq(S), sq(C), sq(k), sq(out_csr), sq(in_csr), sq(batch))
         me = jax.lax.axis_index(dax)
+        H_in, S_in, C_in = H, S, C
 
         # hop 0: feature updates; no-op writes are filtered out immediately
         fv = batch.feat_idx
@@ -438,7 +635,7 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
         H = (H[0].at[fv].set(batch.feat_val, mode="drop"),) + H[1:]
         frontier = fv if rc else jnp.where(changed0, fv, n_local)
         overflow = jnp.zeros((), bool)
-        comm = []
+        comm, sizes = [], []
         n_shrink = jnp.zeros((), jnp.float32)   # SHRINK-classified messages
         n_reagg = jnp.zeros((), jnp.float32)    # rows re-aggregated
         n_dims = jnp.zeros((), jnp.float32)     # (row, dim) cells gathered
@@ -483,10 +680,11 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
             dst_g = jnp.where(mvalid, dst_g, n_pad)
 
             ids, buf, counts, ovf = _pack_by_partition(
-                n_parts, n_local, halo_cap, dst_g, payload)
+                n_parts, n_local, halo_caps[l], dst_g, payload)
             overflow |= ovf
             halo_remote = counts.sum() - counts[me]
-            rid, rpay = _exchange(ids, buf, dax)
+            h_need = counts.max().astype(jnp.int32)
+            rid, rpay = _exchange_fused(ids, buf, dax, True)
             mdst = rid.reshape(-1)
             rpay = rpay.reshape(-1, d_loc + 2)
             rval_ms = sign * rpay[:, :d_loc]
@@ -497,7 +695,7 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
             # ---- affected rows (+ frontier for self-dependence) ----------
             all_dst = jnp.concatenate([mdst, frontier]) \
                 if spec.self_dependent else mdst
-            rec_idx, _, n_rec = _compact_mailbox(
+            rec_idx, _, n_rec = _compact(
                 n_local, all_dst, jnp.zeros((all_dst.shape[0], 1), H[l].dtype),
                 r_cap)
             overflow |= n_rec > r_cap
@@ -533,11 +731,12 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
                 # FULL row through the row-sized pull path
                 row_shrink = real_row
                 pdegs = jnp.where(row_shrink, in_csr.length[aff_c], 0)
-                got, psrc_g, pfid, pvalid, _ew, comm_req, p_ovf = \
+                got, psrc_g, pfid, pvalid, _ew, comm_req, p_need, p_ovf = \
                     _pull_in_neighbors(n_parts, n_local, n_pad, dax, me,
                                        H[l], in_csr, aff_c, pdegs,
                                        pull_cap, r_cap)
                 overflow |= p_ovf
+                pd_need = jnp.zeros((), jnp.int32)
                 pseg = jnp.where(pvalid, pfid, r_cap)
                 S_sh, C_sh = jnp_segment_extremum(agg, got, pseg, r_cap,
                                                   psrc_g, small_ids=True)
@@ -563,6 +762,7 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
                     recovered.sum().astype(jnp.float32), "model")
                 n_pairs = need.sum()
                 overflow |= n_pairs > pd_cap
+                pd_need = n_pairs.astype(jnp.int32)
                 n_dims = n_dims + jax.lax.psum(
                     n_pairs.astype(jnp.float32), "model")
                 n_reagg = n_reagg + (jax.lax.psum(
@@ -572,7 +772,7 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
                 pr, pdim = _masked_pairs(need, pd_cap, r_cap)
                 rows_pair = aff_c[jnp.minimum(pr, r_cap - 1)]
                 pdegs = jnp.where(pr < r_cap, in_csr.length[rows_pair], 0)
-                got, psrc_g, pfid, pvalid, comm_req, p_ovf = \
+                got, psrc_g, pfid, pvalid, comm_req, p_need, p_ovf = \
                     _pull_in_neighbor_dims(n_parts, n_local, n_pad, dax, me,
                                            H[l], in_csr, rows_pair, pdim,
                                            pdegs, pull_cap, pd_cap)
@@ -593,6 +793,9 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
             comm.append(jax.lax.psum(halo_remote, dax))
             comm.append(pull_req)
             comm.append(pull_resp)
+            sizes.append(jnp.stack([n_rec.astype(jnp.int32),
+                                    total.astype(jnp.int32),
+                                    h_need, p_need, pd_need]))
 
             # ---- GROW: fold the candidate extremum in (elementwise) ------
             cand_wins = (sign * cand_S >= sign * base_S) & (cand_C >= 0)
@@ -613,12 +816,21 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
                 + H[l + 2:]
             frontier = rec_idx if rc else jnp.where(changed, rec_idx, n_local)
 
-        add_back = lambda t: jax.tree.map(lambda a: a[None], t)
-        ovf_g = jax.lax.psum(overflow.astype(jnp.float32), dax)
+        # gated commit: the verdict reduces over data AND model axes (a
+        # per-dim pull can overflow on a single model shard; all shards
+        # must agree or rows would tear across the model dimension)
+        ovf_g = jax.lax.psum(overflow.astype(jnp.float32), allax)
+        ok = ovf_g == 0
+        H = _gated_commit(ok, H, H_in)
+        S = _gated_commit(ok, S, S_in)
+        C = _gated_commit(ok, C, C_in)
+        final = jnp.where(ok, frontier, n_local)
+        sz = jax.lax.pmax(jnp.stack(sizes), allax)
         shrink_stats = jax.lax.psum(
             jnp.stack([n_shrink, n_reagg, n_dims, n_recover]), dax)
-        return (add_back(H), add_back(S), add_back(C), add_back(frontier),
-                ovf_g, jnp.stack(comm), shrink_stats)
+        add_back = lambda t: jax.tree.map(lambda a: a[None], t)
+        return (add_back(H), add_back(S), add_back(C), add_back(final),
+                ovf_g, jnp.stack(comm), shrink_stats, sz)
 
     state_spec_h = tuple(P(dax, None, "model") for _ in range(L + 1))
     state_spec_s = (P(dax, None),) + tuple(P(dax, None, "model")
@@ -634,26 +846,34 @@ def make_monotonic_propagate(mesh, workload: Workload, n_local: int,
         in_specs=(tp_param_specs(workload), state_spec_h, state_spec_s,
                   state_spec_s, P(dax, None), csr_spec, csr_spec, batch_spec),
         out_specs=(state_spec_h, state_spec_s, state_spec_s, P(dax, None),
-                   P(), P(), P()),
+                   P(), P(), P(), P()),
         check_vma=False)
-    return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=(1, 2, 3)) if donate else jax.jit(fn)
 
 
 # ---------------------------------------------------------------------------
 # Distributed layer-wise recompute baseline ("RC", pull-based — paper fig 12)
 # ---------------------------------------------------------------------------
 def make_rc_propagate(mesh, workload: Workload, n_local: int,
-                      caps: tuple, halo_cap: int, pull_cap: int,
-                      data_axes: tuple = ("data",)):
+                      caps: tuple, halo_cap, pull_cap: int,
+                      data_axes: tuple = ("data",), *,
+                      donate: bool = False):
     """Distributed RC: frontier ids are exchanged, then every affected vertex
     PULLS all its in-neighbor embeddings (request/response all_to_all pair) —
-    the communication-heavy pattern the paper measures ~70x worse."""
+    the communication-heavy pattern the paper measures ~70x worse.
+
+    Returns ``(H, S, final, ovf, comm [L], sizes [L, 5])``.
+    """
     import math
     n_parts = math.prod(mesh.shape[a] for a in data_axes)
     dax = data_axes if len(data_axes) > 1 else data_axes[0]
+    allax = tuple(data_axes) + ("model",)
     n_pad = n_parts * n_local
+    fuse = n_local < _F32_EXACT
     spec = workload.spec
     L = spec.n_layers
+    halo_caps = _per_hop(halo_cap, L)
+    zero = jnp.zeros((), jnp.int32)
 
     def local_fn(params, H, S, k, out_csr: DistCSR, in_csr: DistCSR,
                  batch: DistBatch):
@@ -661,12 +881,13 @@ def make_rc_propagate(mesh, workload: Workload, n_local: int,
         H, S, k, out_csr, in_csr, batch = (sq(H), sq(S), sq(k), sq(out_csr),
                                            sq(in_csr), sq(batch))
         me = jax.lax.axis_index(dax)
+        H_in, S_in = H, S
 
         fv = batch.feat_idx
         H = (H[0].at[fv].set(batch.feat_val, mode="drop"),) + H[1:]
         frontier = fv
         overflow = jnp.zeros((), bool)
-        comm = []
+        comm, sizes = [], []
 
         for l in range(L):
             r_cap, e_cap = caps[l]
@@ -683,11 +904,11 @@ def make_rc_propagate(mesh, workload: Workload, n_local: int,
                 e_cap=e_cap, my_part=me)
             overflow |= needed > e_cap
             ids, buf, counts, ovf = _pack_by_partition(
-                n_parts, n_local, halo_cap, dst_g, vals)
+                n_parts, n_local, halo_caps[l], dst_g, vals)
             overflow |= ovf
             comm_ids = jax.lax.psum(counts.sum() - counts[me], dax)
-            rid, _ = _exchange(ids, buf, dax)
-            rec_idx, _, n_rec = _compact_mailbox(
+            rid, _ = _exchange_fused(ids, buf, dax, fuse)
+            rec_idx, _, n_rec = _compact(
                 n_local, rid.reshape(-1),
                 jnp.zeros((rid.size, 1), H[l].dtype), r_cap)
             overflow |= n_rec > r_cap
@@ -695,7 +916,7 @@ def make_rc_propagate(mesh, workload: Workload, n_local: int,
             # --- pull ALL in-neighbors of affected vertices ----------------
             aff_c = jnp.minimum(rec_idx, n_local - 1)
             degs = jnp.where(rec_idx < n_local, in_csr.length[aff_c], 0)
-            got, src_g, fid, evalid, ew, comm_req, p_ovf = \
+            got, src_g, fid, evalid, ew, comm_req, p_need, p_ovf = \
                 _pull_in_neighbors(n_parts, n_local, n_pad, dax, me, H[l],
                                    in_csr, aff_c, degs, pull_cap, r_cap)
             overflow |= p_ovf
@@ -703,6 +924,10 @@ def make_rc_propagate(mesh, workload: Workload, n_local: int,
                 ew = jnp.ones(pull_cap, H[l].dtype)
             comm_resp = comm_req  # one value per requested id comes back
             comm.append(comm_ids + comm_req + comm_resp)
+            sizes.append(jnp.stack([n_rec.astype(jnp.int32),
+                                    needed.astype(jnp.int32),
+                                    counts.max().astype(jnp.int32),
+                                    p_need, zero]))
 
             # segment-sum pulled values into S rows of affected vertices
             seg = jnp.where(evalid, fid, r_cap)
@@ -720,10 +945,15 @@ def make_rc_propagate(mesh, workload: Workload, n_local: int,
             S = S[: l + 1] + (S_next,) + S[l + 2:]
             frontier = rec_idx
 
+        ovf_g = jax.lax.psum(overflow.astype(jnp.float32), allax)
+        ok = ovf_g == 0
+        H = _gated_commit(ok, H, H_in)
+        S = _gated_commit(ok, S, S_in)
+        final = jnp.where(ok, frontier, n_local)
+        sz = jax.lax.pmax(jnp.stack(sizes), allax)
         add_back = lambda t: jax.tree.map(lambda a: a[None], t)
-        ovf_g = jax.lax.psum(overflow.astype(jnp.float32), dax)
-        return (add_back(H), add_back(S), add_back(frontier), ovf_g,
-                jnp.stack(comm))
+        return (add_back(H), add_back(S), add_back(final), ovf_g,
+                jnp.stack(comm), sz)
 
     L_ = L
     state_spec_h = tuple(P(dax, None, "model") for _ in range(L_ + 1))
@@ -739,6 +969,6 @@ def make_rc_propagate(mesh, workload: Workload, n_local: int,
         local_fn, mesh=mesh,
         in_specs=(tp_param_specs(workload), state_spec_h, state_spec_s,
                   P(dax, None), csr_spec, csr_spec, batch_spec),
-        out_specs=(state_spec_h, state_spec_s, P(dax, None), P(), P()),
+        out_specs=(state_spec_h, state_spec_s, P(dax, None), P(), P(), P()),
         check_vma=False)
-    return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=(1, 2)) if donate else jax.jit(fn)

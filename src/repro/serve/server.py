@@ -106,10 +106,19 @@ class GraphServer:
         for t in tenants:
             self.register_tenant(t)
 
-        # ingest queue (guarded by _qcv's lock); _busy counts chunks popped
-        # from the queue but not yet applied+published — without it drain()
-        # could declare victory while the worker holds a chunk mid-apply
-        self._queue: deque[_Submitted] = deque()
+        # ingest queues (guarded by _qcv's lock): one FIFO per tenant,
+        # drained by weighted deficit round-robin — each tenant accrues
+        # virtual time served/weight and the scheduler always picks the
+        # non-empty tenant furthest behind, so a 3:1-weighted pair gets a
+        # 3:1 share of every micro-batch under saturation while an idle
+        # tenant costs nothing (work-conserving).  _busy counts chunks
+        # popped from the queues but not yet applied+published — without it
+        # drain() could declare victory while the worker holds a chunk
+        # mid-apply
+        self._queues: dict[str, deque[_Submitted]] = {
+            name: deque() for name in self._tenants}
+        self._served: dict[str, int] = {name: 0 for name in self._tenants}
+        self._qtotal = 0
         self._busy = 0
         self._qcv = threading.Condition()
         # engine lock: held around every apply/flush/swap; "blocking"
@@ -154,6 +163,10 @@ class GraphServer:
             raise ValueError(f"tenant {cfg.name!r} already registered")
         t = Tenant(cfg)
         self._tenants[cfg.name] = t
+        if hasattr(self, "_queues"):     # late registration (post-init)
+            with self._qcv:
+                self._queues[cfg.name] = deque()
+                self._served[cfg.name] = 0
         return t
 
     def tenant(self, name: str) -> Tenant:
@@ -181,7 +194,9 @@ class GraphServer:
         if self._worker is not None:
             if not drain:
                 with self._qcv:
-                    self._queue.clear()
+                    for q in self._queues.values():
+                        q.clear()
+                    self._qtotal = 0
                     self._qcv.notify_all()
             with self._qcv:
                 self._running = False
@@ -223,18 +238,20 @@ class GraphServer:
         if not flat:
             return t.submitted
         with self._qcv:
-            while not self.controller.admits(len(self._queue), len(flat)):
+            while not self.controller.admits(self._qtotal, len(flat)):
                 if self.controller.config.overload == "reject":
                     t.rejected_updates += len(flat)
                     raise AdmissionError(
-                        f"queue full ({len(self._queue)} updates), "
+                        f"queue full ({self._qtotal} updates), "
                         f"rejecting {len(flat)} from {tenant!r}")
                 if not (self._running or not self.threaded):
                     raise ServeStopped(tenant)
                 self._qcv.wait(0.1)
+            q = self._queues[tenant]
             for u in flat:
                 t.submitted += 1
-                self._queue.append(_Submitted(t, u, t.submitted))
+                q.append(_Submitted(t, u, t.submitted))
+            self._qtotal += len(flat)
             t.pending.append((t.submitted, time.perf_counter(), len(flat)))
             self._qcv.notify_all()
         return t.submitted
@@ -258,7 +275,7 @@ class GraphServer:
             self._flush_tail()
             return
         with self._qcv:
-            while (self._queue or self._busy) and self._running:
+            while (self._qtotal or self._busy) and self._running:
                 self._raise_worker_error()
                 self._qcv.wait(0.05)
         with self._scv:
@@ -270,11 +287,10 @@ class GraphServer:
     # before the engine is touched
     def _step(self) -> bool:
         with self._qcv:
-            if not self._queue:
+            if not self._qtotal:
                 return False
-            bs = self.controller.next_batch_size(len(self._queue))
-            chunk = [self._queue.popleft()
-                     for _ in range(min(bs, len(self._queue)))]
+            bs = self.controller.next_batch_size(self._qtotal)
+            chunk = self._pop_weighted(min(bs, self._qtotal))
             self._busy += 1
             self._qcv.notify_all()
         try:
@@ -285,11 +301,26 @@ class GraphServer:
                 self._qcv.notify_all()
         return True
 
+    def _pop_weighted(self, n: int) -> list[_Submitted]:
+        """Pop ``n`` updates by weighted deficit: each slot goes to the
+        non-empty tenant with the lowest virtual time (served / weight).
+        Caller holds the queue lock."""
+        chunk: list[_Submitted] = []
+        for _ in range(n):
+            name = min(
+                (nm for nm, q in self._queues.items() if q),
+                key=lambda nm: self._served[nm]
+                / max(self._tenants[nm].config.weight, 1e-9))
+            chunk.append(self._queues[name].popleft())
+            self._served[name] += 1
+        self._qtotal -= len(chunk)
+        return chunk
+
     def _worker_loop(self) -> None:
         try:
             while True:
                 with self._qcv:
-                    if not self._queue:
+                    if not self._qtotal:
                         if not self._running:
                             break
                         # idle: publish any pipelined tail, then sleep
@@ -477,7 +508,7 @@ class GraphServer:
             if self._t_first_apply and self._t_last_publish else 0.0
         return {
             "version": self._version,
-            "queue_depth": len(self._queue),
+            "queue_depth": self._qtotal,
             "published_updates": self.published_updates,
             "engine_busy_s": busy,
             "engine_updates_per_s": self.published_updates / busy

@@ -55,7 +55,10 @@ class TenantConfig:
     staleness: str = "stale"      # "stale" | "wait" | "reject" (see module doc)
     max_staleness: int = 0        # own updates a read may silently miss
     wait_timeout_s: float = 10.0  # "wait" gives up after this
-    weight: float = 1.0           # load-generator traffic share
+    weight: float = 1.0           # ingest share under saturation: the server
+                                  # batcher drains queued work by weighted
+                                  # deficit (and the load generators use the
+                                  # same ratio for traffic)
 
     def __post_init__(self):
         if self.staleness not in STALENESS_POLICIES:

@@ -18,7 +18,7 @@ def test_distributed_engines_subprocess():
     script = os.path.join(os.path.dirname(__file__), "dist_runner.py")
     env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
     res = subprocess.run([sys.executable, script], capture_output=True,
-                         text=True, timeout=900, env=env)
+                         text=True, timeout=1800, env=env)
     assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
     assert "ALL DIST OK" in res.stdout
     # the paper's headline: RIPPLE communicates far less than RC

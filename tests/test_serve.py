@@ -338,3 +338,30 @@ def test_worker_error_surfaces_on_api_calls():
             srv.query("a", [0])
     srv._error = None
     srv.stop(drain=False)
+
+
+# -- weighted-deficit tenant scheduling -------------------------------------
+def test_weighted_deficit_tenant_share():
+    """Under saturation (both queues backlogged), a 3:1-weighted tenant
+    pair gets a ~3:1 share of the served slots; once the heavy tenant
+    drains, the scheduler is work-conserving and the light tenant takes
+    every slot."""
+    s = _session("ripple")
+    srv = GraphServer(s, tenants=[TenantConfig("heavy", weight=3.0),
+                                  TenantConfig("light", weight=1.0)],
+                      threaded=False, max_batch=8)
+    updates = list(s.make_stream(200, seed=2))
+    srv.submit("heavy", updates[:100])
+    srv.submit("light", updates[100:])
+    srv.pump(max_batches=10)             # both backlogs still non-empty
+    m = srv.metrics()["tenants"]
+    h, l = m["heavy"]["committed"], m["light"]["committed"]
+    assert h + l >= 40, "pump served too little to measure the share"
+    assert h < 100 and l < 100, "a backlog drained: not saturated"
+    ratio = h / max(l, 1)
+    assert 2.2 <= ratio <= 3.8, \
+        f"3:1-weighted pair served at {ratio:.2f}:1 ({h} vs {l})"
+    srv.pump()                           # drain everything
+    m = srv.metrics()["tenants"]
+    assert m["heavy"]["committed"] == 100
+    assert m["light"]["committed"] == 100
