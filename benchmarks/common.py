@@ -41,9 +41,64 @@ def setup(graph: str, workload: str, n_layers: int = 2, d_in: int = 64,
     return wl, g, x, params, holdout
 
 
-def engine_for(kind: str, wl, params, g, state):
-    """Any registered backend by name — dispatch lives in the registry."""
-    return make_engine(kind, wl, params, g, state)
+def engine_for(kind: str, wl, params, g, state, **options):
+    """Any registered backend by name — dispatch lives in the registry.
+    ``options`` pass through to the engine's registered knobs (e.g.
+    ``tolerance=`` for the bounded family's certified approximate mode)."""
+    return make_engine(kind, wl, params, g, state, **options)
+
+
+# keys every per-workload x engine record in BENCH_single.json must carry;
+# ``cache_hit_rate`` is a float for bounded-algebra rows and None otherwise
+_SINGLE_RECORD_KEYS = (
+    "workload", "engine", "aggregator", "algebra", "median_latency_s",
+    "updates_per_sec", "mean_affected_per_hop", "rows_touched_per_batch",
+    "rows_reaggregated_per_batch", "shrink_events_per_batch",
+    "shrink_dims_per_batch", "recover_hits_per_batch",
+    "patch_events_per_batch", "bound_violations_per_batch",
+    "deferred_rows_per_batch", "cache_hit_rate", "n_batches", "batch_size")
+
+_TOLERANCE_ROW_KEYS = (
+    "workload", "engine", "tolerance", "max_err_vs_oracle",
+    "certified_bound", "deferred_rows", "bound_violations",
+    "updates_per_sec", "median_latency_s")
+
+
+def validate_single_schema(doc: dict) -> None:
+    """Assert BENCH_single.json carries the extended per-family schema.
+
+    Called before the dump so a half-wired bench run fails loudly instead
+    of emitting a JSON that CI's assertions would mis-read.  Checks: every
+    record has every per-family column; the bounded workloads (attn/pna)
+    appear with a real cache hit-rate; ``bounded_vs_rc`` covers exactly
+    the bounded rows; ``tolerance_sweep`` rows are complete and include
+    the exact (tolerance=0) baseline."""
+    for key in ("bench", "graph", "n_updates", "batch_size", "smoke",
+                "results", "filtered_vs_rc", "bounded_vs_rc",
+                "tolerance_sweep"):
+        assert key in doc, f"BENCH_single.json missing top-level '{key}'"
+    bounded_wls = set()
+    for rec in doc["results"]:
+        missing = [k for k in _SINGLE_RECORD_KEYS if k not in rec]
+        assert not missing, \
+            f"record {rec.get('workload')}/{rec.get('engine')} missing {missing}"
+        if rec["algebra"] == "bounded":
+            bounded_wls.add(rec["workload"])
+            assert isinstance(rec["cache_hit_rate"], float), \
+                f"bounded record {rec['workload']}/{rec['engine']} must " \
+                "report a numeric cache_hit_rate"
+        else:
+            assert rec["cache_hit_rate"] is None
+    assert bounded_wls, "no bounded-algebra workloads in results"
+    assert set(doc["bounded_vs_rc"]) == bounded_wls, \
+        f"bounded_vs_rc keys {set(doc['bounded_vs_rc'])} != {bounded_wls}"
+    sweep = doc["tolerance_sweep"]
+    assert sweep, "tolerance_sweep is empty"
+    for row in sweep:
+        missing = [k for k in _TOLERANCE_ROW_KEYS if k not in row]
+        assert not missing, f"tolerance_sweep row missing {missing}"
+    assert any(row["tolerance"] == 0.0 for row in sweep), \
+        "tolerance_sweep must include the exact (tolerance=0) baseline"
 
 
 def run_stream(engine, g, holdout, n_updates: int, batch_size: int,

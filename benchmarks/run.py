@@ -150,13 +150,21 @@ def bench_single():
     SHRINK-event rate plus the filtered-propagation row accounting — RIPPLE
     re-aggregates only covered-removal rows while RC re-aggregates every
     affected row, so ``filtered_vs_rc`` records that contrast per shrink
-    batch.  ``RIPPLE_BENCH_SMOKE=1`` shrinks the run for CI.
+    batch.  The bounded-recompute family (ga-s attention, gp-m PNA) gets
+    the same contrast under ``bounded_vs_rc`` (cache hit-rate = PATCHed /
+    (PATCHed + REFRESHed rows)) plus a ``tolerance_sweep``: RIPPLE ga-s at
+    tolerance {0, 1e-3, 1e-1} against the full oracle, recording measured
+    max error vs the certified bound.  ``RIPPLE_BENCH_SMOKE=1`` shrinks
+    the run for CI.
     """
     import json
 
+    from benchmarks.common import validate_single_schema
+
     smoke = os.environ.get("RIPPLE_BENCH_SMOKE") == "1"
     n_upd, bs = (180, 20) if smoke else (1800, 100)
-    workloads = ("gc-s", "gs-s", "gc-m", "gi-s", "gc-w", "gs-max", "gc-min")
+    workloads = ("gc-s", "gs-s", "gc-m", "gi-s", "gc-w", "gs-max", "gc-min",
+                 "ga-s", "gp-m")
     records = []
     for name in workloads:
         for kind in ("ripple", "rc"):
@@ -164,20 +172,29 @@ def bench_single():
             st = InferenceState.bootstrap(wl, params, x, g)
             eng = engine_for(kind, wl, params, g, st)
             mono = wl.spec.monotonic
+            bounded = wl.spec.bounded
             # shrink-heavy, hot-vertex stream for the monotonic family;
-            # paper-protocol equal thirds otherwise
-            thr, lat, stats = run_stream(
-                eng, g, holdout, n_upd, bs, 64,
-                mix=(1, 3, 1) if mono else (1, 1, 1),
-                skew=0.8 if mono else 0.0)
+            # feature churn on high-fan-in rows (the expensive cached rows)
+            # for the bounded family; paper-protocol equal thirds otherwise
+            stream_kw = dict(mix=(1, 1, 1), skew=0.0)
+            if mono:
+                stream_kw = dict(mix=(1, 3, 1), skew=0.8)
+            elif bounded:
+                stream_kw = dict(mix=(1, 1, 2), skew=0.8,
+                                 feature_target="in_degree")
+            thr, lat, stats = run_stream(eng, g, holdout, n_upd, bs, 64,
+                                         **stream_kw)
             lat = float(lat)
             n_b = len(stats)
             hops = max(len(s.affected_per_hop) for s in stats)
             aff_hop = [float(np.mean([s.affected_per_hop[h] for s in stats
                                       if len(s.affected_per_hop) > h]))
                        for h in range(hops)]
+            patches = float(np.sum([s.patch_events for s in stats]))
+            refreshes = float(np.sum([s.rows_reaggregated for s in stats]))
             rec = {"workload": name, "engine": kind,
                    "aggregator": wl.spec.aggregator,
+                   "algebra": wl.agg.algebra,
                    "median_latency_s": lat,
                    "updates_per_sec": float(thr),
                    "mean_affected_per_hop": aff_hop,
@@ -191,6 +208,15 @@ def bench_single():
                        float(np.mean([s.dims_reaggregated for s in stats])),
                    "recover_hits_per_batch":
                        float(np.mean([s.recover_hits for s in stats])),
+                   "patch_events_per_batch":
+                       float(np.mean([s.patch_events for s in stats])),
+                   "bound_violations_per_batch":
+                       float(np.mean([s.bound_violations for s in stats])),
+                   "deferred_rows_per_batch":
+                       float(np.mean([s.deferred_rows for s in stats])),
+                   "cache_hit_rate":
+                       patches / max(patches + refreshes, 1e-9)
+                       if bounded else None,
                    "n_batches": n_b, "batch_size": bs}
             records.append(rec)
             emit(f"single/{name}/{kind}", lat * 1e6,
@@ -214,6 +240,68 @@ def bench_single():
              f"rp_reagg={filtered[name]['ripple_rows_reaggregated']:.0f} "
              f"rc_reagg={filtered[name]['rc_rows_reaggregated']:.0f} "
              f"ratio={filtered[name]['rc_over_ripple_reagg']:.1f}x")
+    # ---- bounded family: PATCH/REFRESH classification vs RC's re-agg -----
+    bounded_vs_rc = {}
+    for name in workloads:
+        rp, rc = by[(name, "ripple")], by[(name, "rc")]
+        if rp["algebra"] != "bounded":
+            continue
+        bounded_vs_rc[name] = {
+            "ripple_rows_touched": rp["rows_touched_per_batch"],
+            "ripple_refresh_rows": rp["rows_reaggregated_per_batch"],
+            "ripple_patch_events": rp["patch_events_per_batch"],
+            "cache_hit_rate": rp["cache_hit_rate"],
+            "rc_rows_reaggregated": rc["rows_reaggregated_per_batch"],
+            "rc_over_ripple_refresh": rc["rows_reaggregated_per_batch"]
+            / max(rp["rows_reaggregated_per_batch"], 1e-9)}
+        emit(f"single/bounded/{name}", 0.0,
+             f"rp_refresh={bounded_vs_rc[name]['ripple_refresh_rows']:.0f} "
+             f"rc_reagg={bounded_vs_rc[name]['rc_rows_reaggregated']:.0f} "
+             f"hit_rate={bounded_vs_rc[name]['cache_hit_rate']:.2f}")
+    # ---- certified approximate mode: tolerance vs oracle error -----------
+    # Two phases per tolerance: the adversarial in-degree-targeted stream
+    # (large feature replacements — every row refreshes exactly), then a
+    # drift phase of tiny per-vertex nudges on the hottest rows, the regime
+    # the deferral budget is built for.  The measured max error against the
+    # full oracle must sit under the certified bound (plus float noise) at
+    # every tolerance; at tolerance=0 the bound is identically zero.
+    from repro.core import FeatureUpdate, UpdateBatch, full_inference
+    import jax.numpy as jnp
+    n_tol, bs_tol = (150, 10) if smoke else (600, 20)
+    n_drift = 6 if smoke else 24
+    tolerance_sweep = []
+    for tol in (0.0, 1e-3, 1e-1):
+        wl, g, x, params, holdout = setup("arxiv-like", "ga-s", n_layers=2)
+        st = InferenceState.bootstrap(wl, params, x, g)
+        eng = engine_for("ripple", wl, params, g, st, tolerance=tol)
+        thr, lat, stats = run_stream(eng, g, holdout, n_tol, bs_tol, 64,
+                                     mix=(1, 1, 2), skew=0.8,
+                                     feature_target="in_degree")
+        drift_rng = np.random.default_rng(7)
+        hot = np.argsort(g.in_degree)[-24:]
+        for _ in range(n_drift):
+            batch = UpdateBatch()
+            for v in drift_rng.choice(hot, size=4, replace=False):
+                nudge = drift_rng.normal(0.0, 1e-6, st.H[0].shape[1])
+                batch.features.append(FeatureUpdate(
+                    int(v), (st.H[0][int(v)] + nudge).astype(np.float32)))
+            stats.append(eng.apply_batch(batch))
+        H_ref, _ = full_inference(wl, params, jnp.asarray(st.H[0]),
+                                  *g.coo(), g.in_degree)
+        err = float(np.abs(st.H[-1] - np.asarray(H_ref[-1])).max())
+        bound = float(eng.error_bound().max())
+        row = {"workload": "ga-s", "engine": "ripple", "tolerance": tol,
+               "max_err_vs_oracle": err, "certified_bound": bound,
+               "deferred_rows": int(np.sum([s.deferred_rows
+                                            for s in stats])),
+               "bound_violations": int(np.sum([s.bound_violations
+                                               for s in stats])),
+               "updates_per_sec": float(thr),
+               "median_latency_s": float(lat)}
+        tolerance_sweep.append(row)
+        emit(f"single/tolerance/ga-s/tol{tol:g}", float(lat) * 1e6,
+             f"ups={thr:.0f} max_err={err:.2e} bound={bound:.2e} "
+             f"deferred={row['deferred_rows']}")
     # ---- device-resident engine: steady-state device-vs-host pairs -------
     # The jitted engine wins where per-batch work is large: monotonic
     # re-aggregation (gs-max) and dense graphs (products-like); on small
@@ -296,15 +384,18 @@ def bench_single():
         / max(s["updates_per_sec"] for s in scaling)
     emit("single/device_scaling/ratio", 0.0, f"min_over_max={ups_ratio:.2f}")
 
+    doc = {"bench": "single", "graph": "arxiv-like",
+           "n_updates": n_upd, "batch_size": bs, "smoke": smoke,
+           "results": records, "filtered_vs_rc": filtered,
+           "bounded_vs_rc": bounded_vs_rc,
+           "tolerance_sweep": tolerance_sweep,
+           "device_vs_host": device_rows,
+           "device_scaling": {"points": scaling,
+                              "ups_ratio_min_over_max": ups_ratio}}
+    validate_single_schema(doc)
     out = os.path.join(os.path.dirname(__file__), "..", "BENCH_single.json")
     with open(out, "w") as f:
-        json.dump({"bench": "single", "graph": "arxiv-like",
-                   "n_updates": n_upd, "batch_size": bs, "smoke": smoke,
-                   "results": records, "filtered_vs_rc": filtered,
-                   "device_vs_host": device_rows,
-                   "device_scaling": {"points": scaling,
-                                      "ups_ratio_min_over_max": ups_ratio}},
-                  f, indent=2)
+        json.dump(doc, f, indent=2)
     print(f"wrote {os.path.relpath(out)}", flush=True)
 
 

@@ -51,7 +51,8 @@ def _materialize_state(workload: Workload, params: list, graph: DynamicGraph,
                        state: InferenceState) -> InferenceState:
     """From-scratch layer-wise pass over the current graph + features,
     written into ``state`` in place (exact, the oracle's output)."""
-    from repro.core.aggregators import compute_contributors
+    from repro.core.aggregators import (compute_bounded_aux,
+                                        compute_contributors)
 
     H, S = full_inference(workload, params, jnp.asarray(state.H[0]),
                           *graph.coo(), graph.in_degree)
@@ -60,6 +61,10 @@ def _materialize_state(workload: Workload, params: list, graph: DynamicGraph,
     state.k = graph.in_degree.copy()
     if workload.agg.tracks_contributors:
         state.C = compute_contributors(workload.agg, state.H, state.S, graph)
+    if workload.agg.tracks_aux:
+        state.A = compute_bounded_aux(workload.agg, state.H, graph)
+        # the pass above is exact: no deferred staleness survives it
+        state.eps = np.zeros(workload.spec.n_layers + 1, dtype=np.float32)
     return state
 
 
@@ -69,9 +74,10 @@ class _HostAdapter:
     _impl_cls: type
 
     def __init__(self, workload: Workload, params: list,
-                 graph: DynamicGraph, state: InferenceState):
+                 graph: DynamicGraph, state: InferenceState, *,
+                 tolerance: float = 0.0):
         self._impl = self._impl_cls(workload, params_to_numpy(params),
-                                    graph, state)
+                                    graph, state, tolerance=tolerance)
 
     def apply_batch(self, batch: UpdateBatch) -> UpdateResult:
         s = self._impl.apply_batch(batch)
@@ -83,7 +89,15 @@ class _HostAdapter:
                             shrink_events=s.shrink_events,
                             rows_reaggregated=s.rows_reaggregated,
                             dims_reaggregated=s.dims_reaggregated,
-                            recover_hits=s.recover_hits)
+                            recover_hits=s.recover_hits,
+                            patch_events=s.patch_events,
+                            bound_violations=s.bound_violations,
+                            deferred_rows=s.deferred_rows)
+
+    def error_bound(self) -> np.ndarray:
+        """Certified per-vertex error bound (bounded workloads; zeros
+        elsewhere and at tolerance=0 with no deferred staleness)."""
+        return self._impl.error_bound()
 
     def sync(self) -> InferenceState:
         return self._impl.state
@@ -93,7 +107,14 @@ class _HostAdapter:
         return self._impl.state
 
 
-@register_engine("ripple", "rp")
+_TOLERANCE_OPTION = EngineOption(
+    "tolerance", 0.0,
+    "bounded-family approximate mode: defer interior-hop writes while the "
+    "certified per-vertex error bound stays under this value; 0.0 is "
+    "bit-exact. Raises for non-bounded workloads when > 0.")
+
+
+@register_engine("ripple", "rp", options=(_TOLERANCE_OPTION,))
 class RippleAdapter(_HostAdapter):
     _impl_cls = RippleEngine
 
@@ -124,6 +145,7 @@ _DEVICE_OPTIONS = (
     EngineOption("warm", True,
                  "precompile the rung-0 cap schedule at construction via a "
                  "sentinel no-op batch"),
+    _TOLERANCE_OPTION,
 )
 
 
@@ -140,14 +162,16 @@ class DeviceAdapter:
                  graph: DynamicGraph, state: InferenceState, *,
                  min_bucket: int = 64, donate: bool = True,
                  use_pallas: bool = False, async_dispatch: bool = False,
-                 debug_checks: bool = False, warm: bool = True):
+                 debug_checks: bool = False, warm: bool = True,
+                 tolerance: float = 0.0):
         self._host = state
         self._async = async_dispatch
         self._impl = DeviceEngine(workload, params, graph, state,
                                   min_bucket=min_bucket, donate=donate,
                                   use_pallas=use_pallas,
                                   async_dispatch=async_dispatch,
-                                  debug_checks=debug_checks, warm=warm)
+                                  debug_checks=debug_checks, warm=warm,
+                                  tolerance=tolerance)
 
     def apply_batch(self, batch: UpdateBatch) -> UpdateResult:
         t0 = time.perf_counter()
@@ -162,7 +186,16 @@ class DeviceAdapter:
                             shrink_events=self._impl.last_shrink_events,
                             rows_reaggregated=self._impl.last_rows_reaggregated,
                             dims_reaggregated=self._impl.last_dims_reaggregated,
-                            recover_hits=self._impl.last_recover_hits)
+                            recover_hits=self._impl.last_recover_hits,
+                            patch_events=self._impl.last_patch_events,
+                            bound_violations=self._impl.last_bound_violations,
+                            deferred_rows=self._impl.last_deferred_rows)
+
+    def error_bound(self) -> np.ndarray:
+        """Certified per-vertex error bound (bounded workloads; drains the
+        async pipeline so the high-water epsilons are current)."""
+        self._impl.flush()
+        return self._impl.error_bound()
 
     def flush(self) -> None:
         """Drain the async pipeline (no-op when synchronous)."""
@@ -196,6 +229,13 @@ class DeviceAdapter:
         if self._host.C is not None:
             for c_host, c_dev in zip(self._host.C, dev.C):
                 c_host[...] = np.asarray(c_dev)
+        if self._host.A is not None:
+            names = self._impl.workload.agg.aux_names
+            for a_host, a_dev in zip(self._host.A[1:], dev.A[1:]):
+                for nm, arr in zip(names, a_dev):
+                    a_host[nm][...] = np.asarray(arr)
+            self._host.eps[...] = np.asarray(self._impl._eps,
+                                             dtype=np.float32)
         return self._host
 
     @property
@@ -328,6 +368,11 @@ class DistAdapter:
     vertex-id order — so ``swap_engine`` host<->mesh is exact.  The session
     graph stays authoritative on the host: the engine mirrors every
     effective update into its relabeled copy during routing.
+
+    Bounded-family workloads (ga-s, gp-m) have no mesh propagation path
+    yet: the adapter *declares* the gap by setting ``bounded_fallback``
+    and routing every call through a host ``RecomputeEngine`` — exact
+    (RC-style re-aggregation), single-shard, never silently wrong.
     """
 
     def __init__(self, workload: Workload, params: list,
@@ -336,11 +381,18 @@ class DistAdapter:
                  data_axes: tuple = ("data",), seed: int = 0,
                  min_bucket: int = 32, donate: bool = True,
                  async_dispatch: bool = False, warm: bool = True):
+        self._host = state
+        self._async = async_dispatch
+        self.bounded_fallback = workload.agg.algebra == "bounded"
+        if self.bounded_fallback:
+            self._impl = None
+            self._fallback = RecomputeEngine(workload,
+                                             params_to_numpy(params),
+                                             graph, state)
+            return
         if mesh is None:
             from repro.launch.mesh import make_local_mesh
             mesh = make_local_mesh(data=jax.device_count(), model=1)
-        self._host = state
-        self._async = async_dispatch
         self._impl = DistEngine(workload, params, graph, state, mesh,
                                 mode=mode, data_axes=tuple(data_axes),
                                 seed=seed, min_bucket=min_bucket,
@@ -349,6 +401,14 @@ class DistAdapter:
 
     def apply_batch(self, batch: UpdateBatch) -> UpdateResult:
         t0 = time.perf_counter()
+        if self.bounded_fallback:
+            s = self._fallback.apply_batch(batch)
+            return UpdateResult(affected=np.asarray(s.final_affected),
+                                wall_seconds=time.perf_counter() - t0,
+                                affected_per_hop=s.affected_per_hop,
+                                messages_per_hop=s.messages_per_hop,
+                                numeric_ops=s.numeric_ops,
+                                rows_reaggregated=s.rows_reaggregated)
         affected = self._impl.apply_batch(batch)
         comm = self._impl.last_comm  # None until the first resolve (async)
         return UpdateResult(
@@ -362,9 +422,12 @@ class DistAdapter:
 
     def flush(self) -> None:
         """Drain the async pipeline (no-op when synchronous)."""
-        self._impl.flush()
+        if not self.bounded_fallback:
+            self._impl.flush()
 
     def sync(self) -> InferenceState:
+        if self.bounded_fallback:
+            return self._fallback.state
         return self._impl.gather_state(self._host)
 
     @property
@@ -373,17 +436,20 @@ class DistAdapter:
 
     def query(self, vertices: np.ndarray) -> np.ndarray:
         """Backend-native read: final-layer rows without a full gather."""
+        if self.bounded_fallback:
+            v = np.asarray(vertices, dtype=np.int64)
+            return self._fallback.state.H[-1][v]
         return self._impl.query(vertices)
 
     @property
     def ckpt_shards(self) -> int:
         """Data-shard count for the per-shard checkpoint layout."""
-        return self._impl.n_parts
+        return 1 if self.bounded_fallback else self._impl.n_parts
 
     @property
-    def impl(self) -> DistEngine:
+    def impl(self):
         """The underlying engine (comm counters, CSR stats) for benches."""
-        return self._impl
+        return self._fallback if self.bounded_fallback else self._impl
 
 
 @register_engine("dist-rc", "dist-recompute", options=_DIST_OPTIONS)

@@ -65,6 +65,11 @@ class UpdateResult:
     dims_reaggregated: int = 0  # monotonic: (row, dim) cells gathered
     recover_hits: int = 0       # monotonic: shrunk dims the re-cover probe
     #                             re-witnessed without touching the CSR
+    patch_events: int = 0       # bounded: O(1) cache patches applied
+    bound_violations: int = 0   # bounded: rows refreshed because the stale
+    #                             cache could not certify the tolerance
+    deferred_rows: int = 0      # bounded approximate mode: rows whose H
+    #                             write was deferred under the budget
 
     @property
     def total_affected(self) -> int:

@@ -176,10 +176,12 @@ class InferenceSession:
     def make_stream(self, n_updates: int, seed: int = 1,
                     feature_scale: float = 1.0,
                     mix: tuple[float, float, float] = (1.0, 1.0, 1.0),
-                    skew: float = 0.0) -> UpdateStream:
+                    skew: float = 0.0,
+                    feature_target: str = "rank") -> UpdateStream:
         """Paper-protocol stream (§7.1.2) from the held-out edge split;
-        ``mix``/``skew`` expose the add/delete/feature ratio and hot-vertex
-        locality knobs of :func:`repro.data.streams.make_stream`."""
+        ``mix``/``skew``/``feature_target`` expose the add/delete/feature
+        ratio and hot-vertex locality knobs of
+        :func:`repro.data.streams.make_stream`."""
         if self.holdout is None:
             empty = (np.empty(0, np.int64), np.empty(0, np.int64),
                      np.empty(0, np.float32))
@@ -188,7 +190,8 @@ class InferenceSession:
             holdout = self.holdout
         return make_stream(self.graph, holdout, n_updates,
                            self.state.H[0].shape[1], seed=seed,
-                           feature_scale=feature_scale, mix=mix, skew=skew)
+                           feature_scale=feature_scale, mix=mix, skew=skew,
+                           feature_target=feature_target)
 
     # -- ingest -----------------------------------------------------------
     def ingest(self, updates, *, batch_size: int | None = None,
@@ -310,6 +313,9 @@ class InferenceSession:
                 "step": np.int64(self.step)}
         if st.C is not None:  # monotonic tracked contributors ride along
             tree["C"] = list(st.C)
+        if st.A is not None:  # bounded cached aux + staleness high-water
+            tree["A"] = [dict(a) for a in st.A]
+            tree["eps"] = st.eps
         return tree
 
     def checkpoint(self) -> str:
@@ -348,7 +354,11 @@ class InferenceSession:
             S=[np.asarray(s, dtype=np.float32) for s in tree["S"]],
             k=np.asarray(tree["k"], dtype=np.float32),
             C=[np.asarray(c, dtype=np.int32) for c in tree["C"]]
-            if "C" in tree else None)
+            if "C" in tree else None,
+            A=[{nm: np.asarray(v) for nm, v in a.items()} for a in tree["A"]]
+            if "A" in tree else None,
+            eps=np.asarray(tree["eps"], dtype=np.float32)
+            if "eps" in tree else None)
         self.step = int(tree["step"])
         self.engine = make_engine(self.engine_name, self.workload,
                                   self.params, self.graph, self.state,

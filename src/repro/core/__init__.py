@@ -4,8 +4,10 @@
 from .graph import (DynamicGraph, EdgeUpdate, FeatureUpdate,  # noqa: F401
                     UpdateBatch, erdos_renyi, powerlaw_graph)
 from .aggregators import (AGGREGATOR_NAMES, Aggregator,  # noqa: F401
-                          InvertibleAgg, MonotonicAgg, get_aggregator)
-from .workloads import (MONOTONIC_WORKLOAD_NAMES, WORKLOAD_NAMES,  # noqa: F401
+                          BoundedRecomputeAgg, InvertibleAgg, MonotonicAgg,
+                          get_aggregator)
+from .workloads import (BOUNDED_WORKLOAD_NAMES,  # noqa: F401
+                        MONOTONIC_WORKLOAD_NAMES, WORKLOAD_NAMES,
                         Workload, make_workload)
 from .state import InferenceState, params_to_numpy  # noqa: F401
 from .full import full_inference, predict_labels  # noqa: F401

@@ -81,6 +81,15 @@ class Event(Enum):
     SHRINK = "shrink"  # re-aggregate the touched row over its in-neighbors
 
 
+class BoundedEvent(Enum):
+    """Classification of one touched row at a bounded-recompute vertex."""
+
+    PATCH = "patch"          # O(1) cache patch; no in-neighborhood gather
+    REFRESH = "refresh"      # cache invalidated: re-aggregate the row
+    BOUND_VIOLATION = "bound-violation"  # tolerance>0: deferral denied,
+    #                          the row is force-written and propagated
+
+
 @dataclass(frozen=True)
 class Aggregator:
     """One aggregation function's algebraic contract."""
@@ -92,9 +101,25 @@ class Aggregator:
         return True
 
     @property
+    def algebra(self) -> str:
+        """Which of the three families: invertible | monotonic | bounded."""
+        return "invertible"
+
+    @property
     def tracks_contributors(self) -> bool:
         """Does state need per-(vertex, dim) contributor refs (``C``)?"""
         return not self.invertible
+
+    @property
+    def tracks_aux(self) -> bool:
+        """Does state need per-vertex cached partial state (``A``)?"""
+        return False
+
+    @property
+    def x_multiplier(self) -> int:
+        """Width of the normalized aggregate relative to the input dim
+        (PNA's tower concatenates several aggregations per dim)."""
+        return 1
 
     @property
     def weighted(self) -> bool:
@@ -137,6 +162,10 @@ class MonotonicAgg(Aggregator):
         return False
 
     @property
+    def algebra(self) -> str:
+        return "monotonic"
+
+    @property
     def identity(self) -> float:
         """Empty-row aggregate (never beats any candidate)."""
         return -self.sign * np.inf
@@ -162,14 +191,433 @@ class MonotonicAgg(Aggregator):
         return xp.where(xp.isfinite(S), S, 0.0)
 
 
+def _np_topk_passes(vals: np.ndarray, seg: np.ndarray, n_rows: int,
+                    kk: int) -> tuple[np.ndarray, np.ndarray]:
+    """k passes of masked segment-max with single-winner deactivation.
+
+    ``vals [E, d]`` grouped by ``seg [E]``.  Pass p finds each (row, dim)'s
+    current maximum, deactivates exactly one witnessing edge (segment-min of
+    edge index among the ties), and accumulates the value.  Returns
+    ``(x [n_rows, d], theta [n_rows, d])`` where x sums the top-min(kk, deg)
+    values per dim and theta is the kk-th largest (-inf when deg < kk)."""
+    E, d = vals.shape
+    active = np.ones((E, d), dtype=bool)
+    xsum = np.zeros((n_rows, d), dtype=np.float32)
+    theta = np.full((n_rows, d), -np.inf, dtype=np.float32)
+    eidx = np.broadcast_to(np.arange(E, dtype=np.int64)[:, None], (E, d))
+    for _ in range(kk):
+        cur = np.where(active, vals, -np.inf)
+        M = np.full((n_rows, d), -np.inf, dtype=np.float32)
+        np.maximum.at(M, seg, cur)
+        Mrow = M[seg] if E else M[:0]
+        cand = active & (cur == Mrow) & np.isfinite(Mrow)
+        widx = np.full((n_rows, d), E, dtype=np.int64)
+        np.minimum.at(widx, seg, np.where(cand, eidx, E))
+        win = cand & (eidx == widx[seg]) if E else cand
+        xsum += np.where(np.isfinite(M), M, 0.0)
+        theta = M
+        active &= ~win
+    return xsum, theta
+
+
+def _jnp_topk_passes(vals, seg, n_rows: int, kk: int):
+    """jnp half of :func:`_np_topk_passes`; ``seg == n_rows`` marks padding
+    lanes (they never win a pass)."""
+    import jax
+    import jax.numpy as jnp
+    E, d = vals.shape
+    active = jnp.broadcast_to((seg < n_rows)[:, None], (E, d))
+    eidx = jnp.broadcast_to(jnp.arange(E, dtype=jnp.int32)[:, None], (E, d))
+    xsum = jnp.zeros((n_rows, d), dtype=jnp.float32)
+    theta = jnp.full((n_rows, d), -jnp.inf, dtype=jnp.float32)
+    row = jnp.minimum(seg, n_rows - 1)
+    for _ in range(kk):
+        cur = jnp.where(active, vals, -jnp.inf)
+        M = jax.ops.segment_max(cur, seg, num_segments=n_rows + 1)[:n_rows]
+        Mrow = M[row]
+        cand = active & (cur == Mrow) & jnp.isfinite(Mrow)
+        widx = jax.ops.segment_min(jnp.where(cand, eidx, E), seg,
+                                   num_segments=n_rows + 1)[:n_rows]
+        win = cand & (eidx == widx[row])
+        xsum = xsum + jnp.where(jnp.isfinite(M), M, 0.0)
+        theta = M
+        active = active & ~win
+    return xsum, theta
+
+
+@dataclass(frozen=True)
+class BoundedRecomputeAgg(Aggregator):
+    """Neither invertible nor monotonic: the third algebra family.
+
+    Softmax attention, top-k, and PNA towers reweight or re-rank a whole
+    neighborhood per update, so neither delta mailboxes nor extremum
+    tracking apply.  Incremental cost stays frontier-proportional by
+    caching per-vertex partial state (``InferenceState.A``): a softmax
+    normalizer + max-logit anchor, the k-th-value admission threshold, or
+    running moment sums.  Each touched row is classified
+
+        PATCH    the cache absorbs the message in O(1) per message —
+                 renormalize, admission-test, or moment-update; no gather
+        REFRESH  a cache invariant broke (threshold crossing, normalizer
+                 collapse, witness loss, variance drift): re-aggregate the
+                 row over its current in-neighborhood (bounded recompute)
+
+    and with ``tolerance>0`` a third outcome exists at interior layers:
+    an embedding write whose magnitude fits the layer's certified deferral
+    budget is *deferred* (stale-cache fast path); a changed row above the
+    budget is a BOUND-VIOLATION and is force-written + propagated.  The
+    caches are always exact w.r.t. the *stored* embeddings, so deferral
+    composes: a deferred vertex's neighbors aggregated exactly what is
+    stored, and the next touch carries the full accumulated correction.
+
+    Contract notes: ``S`` stores the *normalized* aggregate x directly
+    (``normalize`` is the identity), so every engine's read path is
+    unchanged; ``x_multiplier`` widens the UPDATE's neighbor input (PNA's
+    tower is 3 dims per input dim)."""
+
+    @property
+    def invertible(self) -> bool:
+        return False
+
+    @property
+    def algebra(self) -> str:
+        return "bounded"
+
+    @property
+    def tracks_contributors(self) -> bool:
+        return False
+
+    @property
+    def tracks_aux(self) -> bool:
+        return True
+
+    @property
+    def aux_names(self) -> tuple[str, ...]:
+        raise NotImplementedError
+
+    def init_aux(self, n: int, d: int) -> dict[str, np.ndarray]:
+        raise NotImplementedError
+
+    def np_reaggregate(self, H_prev, nbr, seg, n_rows, k_rows):
+        """Re-aggregate rows from scratch: ``nbr [E]`` in-neighbor ids
+        grouped by ``seg [E]`` into ``n_rows`` rows with in-degrees
+        ``k_rows``.  Returns ``(x [n_rows, d * x_multiplier], aux dict)``."""
+        raise NotImplementedError
+
+    def np_patch(self, x_rows, aux, k_rows, seg, src, val_old, val_new,
+                 has_old, has_new):
+        """Classify + patch one hop's messages against cached rows.
+
+        ``x_rows [R, d*mult]`` and ``aux`` (dict of [R]/[R, d] arrays) are
+        the touched rows' cached state; messages ``j`` target row
+        ``seg[j]`` from vertex ``src[j]`` and carry the contribution
+        transition ``val_old[j] -> val_new[j]`` (``has_old``/``has_new``
+        flag pure adds/deletes).  Returns ``(x', aux', refresh [R])`` —
+        rows in ``refresh`` must be re-aggregated instead (their returned
+        patch values are unspecified)."""
+        raise NotImplementedError
+
+    def aggregate_dense(self, stack: np.ndarray, k: int) -> np.ndarray:
+        """Dense per-row form for the vertexwise baseline:
+        ``stack [deg, d] -> x [d * x_multiplier]``."""
+        raise NotImplementedError
+
+    def jnp_reaggregate(self, vals, src, seg, n_rows, k_rows):
+        """jnp half of :meth:`np_reaggregate` for the jitted engines:
+        ``vals [E, d]`` are already-gathered source embeddings with ids
+        ``src [E]``; ``seg == n_rows`` marks padding lanes.  Returns
+        ``(x [n_rows, d*mult], aux tuple in aux_names order)``."""
+        raise NotImplementedError
+
+    def gain(self, D: float, d: int, kmax: float, M: float) -> float:
+        """Certified aggregation gain G(D): a bound on ``|x' - x|_inf``
+        when every in-neighbor embedding moves by at most D in inf-norm
+        (``d`` input dim, ``kmax`` max in-degree, ``M`` max |H| bound)."""
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class AttentionAgg(BoundedRecomputeAgg):
+    """Softmax attention over in-neighbors (GAT-style, fixed scoring head):
+    ``x_v = sum_u softmax_u(logit(h_u)) * h_u`` with
+    ``logit(h) = sum(h)/sqrt(d)``.  Cache per row: max-logit anchor ``m``
+    (a stale-safe upper bound on every in-neighbor's logit) and the
+    normalizer ``z = sum exp(logit - m)``.  Patches rescale the cached
+    mass by ``exp(m - m')`` and add/subtract message terms; REFRESH fires
+    on normalizer collapse (the delete-the-dominant-logit adversarial
+    case) where the cancellation would destroy float32 precision."""
+
+    rescale_bound: float = 60.0  # exp() underflow horizon for the rescale
+    zmin: float = 1e-12          # absolute normalizer floor
+    zrel: float = 1e-3           # z' below this fraction of the absolute
+    #                              patched mass -> catastrophic cancellation
+
+    @property
+    def aux_names(self) -> tuple[str, ...]:
+        return ("m", "z")
+
+    def init_aux(self, n, d):
+        return {"m": np.full(n, -np.inf, dtype=np.float32),
+                "z": np.zeros(n, dtype=np.float32)}
+
+    @staticmethod
+    def logits(vals, xp=np):
+        return vals.sum(axis=-1) / np.float32(np.sqrt(vals.shape[-1]))
+
+    def np_reaggregate(self, H_prev, nbr, seg, n_rows, k_rows):
+        d = H_prev.shape[1]
+        vals = H_prev[nbr].astype(np.float32, copy=False)
+        lg = self.logits(vals)
+        m = np.full(n_rows, -np.inf, dtype=np.float32)
+        np.maximum.at(m, seg, lg)
+        x = np.zeros((n_rows, d), dtype=np.float32)
+        z = np.zeros(n_rows, dtype=np.float32)
+        if nbr.size:
+            e = np.exp(lg - m[seg])
+            np.add.at(z, seg, e)
+            np.add.at(x, seg, e[:, None] * vals)
+        nz = z > 0
+        x[nz] /= z[nz, None]
+        x[~nz] = 0.0
+        return x, {"m": m, "z": z}
+
+    def np_patch(self, x_rows, aux, k_rows, seg, src, val_old, val_new,
+                 has_old, has_new):
+        R, _ = x_rows.shape
+        m, z = aux["m"], aux["z"]
+        l_new = np.where(has_new, self.logits(val_new), -np.inf)
+        l_old = np.where(has_old, self.logits(val_old), -np.inf)
+        m2 = m.copy()
+        np.maximum.at(m2, seg, l_new)
+        mf = np.where(np.isfinite(m2), m2, 0.0)
+        # old-mass rescale: m only ever grows, so factor <= 1; below the
+        # rescale bound the old mass is < e^-60 of the new and underflow
+        # to 0 is numerically exact at float32 (masked subtract: -inf anchors
+        # on both sides would produce a nan that the where() discards anyway)
+        fin = np.isfinite(m2) & np.isfinite(m)
+        dm = np.full_like(m2, -np.inf)
+        np.subtract(m, m2, out=dm, where=fin)
+        factor = np.where(fin,
+                          np.exp(np.maximum(dm, -self.rescale_bound)),
+                          0.0).astype(np.float32)
+        e_new = np.where(has_new, np.exp(np.minimum(l_new - mf[seg], 0.0)),
+                         0.0).astype(np.float32)
+        e_old = np.where(has_old,
+                         np.exp(np.minimum(l_old - mf[seg],
+                                           self.rescale_bound)),
+                         0.0).astype(np.float32)
+        z_base = z * factor
+        dz = np.zeros(R, dtype=np.float32)
+        np.add.at(dz, seg, e_new - e_old)
+        adz = np.zeros(R, dtype=np.float32)
+        np.add.at(adz, seg, e_new + e_old)
+        z2 = z_base + dz
+        N2 = x_rows * z_base[:, None]
+        dN = np.zeros_like(x_rows)
+        np.add.at(dN, seg,
+                  e_new[:, None] * np.where(has_new[:, None], val_new, 0.0)
+                  - e_old[:, None] * np.where(has_old[:, None], val_old, 0.0))
+        N2 += dN
+        touched = np.zeros(R, dtype=bool)
+        touched[seg] = True
+        refresh = touched & ((z2 <= self.zmin)
+                             | (z2 < self.zrel * (z_base + adz)))
+        x2 = np.where((z2 > 0)[:, None], N2 / np.maximum(z2, self.zmin)[:, None],
+                      0.0)
+        return x2, {"m": m2, "z": z2}, refresh
+
+    def aggregate_dense(self, stack, k):
+        lg = self.logits(stack)
+        m = lg.max()
+        e = np.exp(lg - m)
+        return (e[:, None] * stack).sum(axis=0) / e.sum()
+
+    def jnp_reaggregate(self, vals, src, seg, n_rows, k_rows):
+        import jax
+        import jax.numpy as jnp
+        d = vals.shape[1]
+        valid = seg < n_rows
+        row = jnp.minimum(seg, n_rows - 1)
+        lg = jnp.where(valid, vals.sum(-1) / np.float32(np.sqrt(d)), -jnp.inf)
+        m = jax.ops.segment_max(lg, seg, num_segments=n_rows + 1)[:n_rows]
+        mf = jnp.where(jnp.isfinite(m), m, 0.0)
+        e = jnp.where(valid, jnp.exp(lg - mf[row]), 0.0)
+        z = jax.ops.segment_sum(e, seg, num_segments=n_rows + 1)[:n_rows]
+        vc = jnp.where(valid[:, None], vals, 0.0)
+        N = jax.ops.segment_sum(e[:, None] * vc, seg,
+                                num_segments=n_rows + 1)[:n_rows]
+        x = jnp.where((z > 0)[:, None], N / jnp.maximum(z, self.zmin)[:, None],
+                      0.0)
+        return x, (m, z)
+
+    def gain(self, D, d, kmax, M):
+        if D <= 0:
+            return 0.0
+        # softmax weight total variation under a logit perturbation of
+        # delta = sqrt(d) * D is <= min(2, 2*(e^{2 delta} - 1))
+        tv = min(2.0, 2.0 * float(np.expm1(min(2.0 * np.sqrt(d) * D, 60.0))))
+        return D + tv * (M + D)
+
+
+@dataclass(frozen=True)
+class TopKAgg(BoundedRecomputeAgg):
+    """Per-dim sum of the top-k in-neighbor values.  Cache per (row, dim):
+    the admission threshold ``theta`` = current k-th largest value (-inf
+    when deg < k).  A message strictly below theta (new side) and strictly
+    below theta (old side) cannot change the top-k set, so PATCH is a
+    no-op — filtered propagation stops those rows dead; anything touching
+    the admission boundary is a REFRESH."""
+
+    kk: int = 3
+
+    @property
+    def aux_names(self) -> tuple[str, ...]:
+        return ("theta",)
+
+    def init_aux(self, n, d):
+        return {"theta": np.full((n, d), -np.inf, dtype=np.float32)}
+
+    def np_reaggregate(self, H_prev, nbr, seg, n_rows, k_rows):
+        vals = H_prev[nbr].astype(np.float32, copy=False)
+        x, theta = _np_topk_passes(vals, seg, n_rows, self.kk)
+        return x, {"theta": theta}
+
+    def np_patch(self, x_rows, aux, k_rows, seg, src, val_old, val_new,
+                 has_old, has_new):
+        R = x_rows.shape[0]
+        thm = aux["theta"][seg]
+        hit = ((has_new[:, None] & (val_new > thm))
+               | (has_old[:, None] & (val_old >= thm)))
+        refresh = np.zeros(R, dtype=bool)
+        if seg.size:
+            np.logical_or.at(refresh, seg, hit.any(axis=1))
+        return x_rows, aux, refresh
+
+    def aggregate_dense(self, stack, k):
+        top = np.sort(stack, axis=0)[::-1][:self.kk]
+        return top.sum(axis=0)
+
+    def jnp_reaggregate(self, vals, src, seg, n_rows, k_rows):
+        x, theta = _jnp_topk_passes(vals, seg, n_rows, self.kk)
+        return x, (theta,)
+
+    def gain(self, D, d, kmax, M):
+        # each of the kk order statistics is 1-Lipschitz in inf-norm
+        return self.kk * D
+
+
+@dataclass(frozen=True)
+class PNAAgg(BoundedRecomputeAgg):
+    """PNA tower (mean/std/max + degree scaler): per input dim the
+    normalized aggregate is ``[log1p(k)*mean, std, max]`` — 3 dims per
+    input dim (``x_multiplier = 3``).  Cache per row: moment sums
+    ``s1 = sum h``, ``s2 = sum h^2`` (invertible patches) and the tracked
+    per-dim max ``mx`` with witness ``mref`` (GROW folds; a witness loss
+    is a REFRESH, as is accumulated variance drift)."""
+
+    var_guard: float = 1e-3
+
+    @property
+    def x_multiplier(self) -> int:
+        return 3
+
+    @property
+    def aux_names(self) -> tuple[str, ...]:
+        return ("s1", "s2", "mx", "mref")
+
+    def init_aux(self, n, d):
+        return {"s1": np.zeros((n, d), dtype=np.float32),
+                "s2": np.zeros((n, d), dtype=np.float32),
+                "mx": np.full((n, d), -np.inf, dtype=np.float32),
+                "mref": np.full((n, d), -1, dtype=np.int32)}
+
+    @staticmethod
+    def _tower(s1, s2, mx, k, xp=np):
+        kk = xp.maximum(k, 1.0)[:, None]
+        mean = s1 / kk
+        std = xp.sqrt(xp.maximum(s2 / kk - mean * mean, 0.0))
+        mxf = xp.where(xp.isfinite(mx), mx, 0.0)
+        scale = xp.log1p(xp.maximum(k, 0.0))[:, None]
+        return xp.concatenate([scale * mean, std, mxf], axis=1)
+
+    def np_reaggregate(self, H_prev, nbr, seg, n_rows, k_rows):
+        d = H_prev.shape[1]
+        vals = H_prev[nbr].astype(np.float32, copy=False)
+        s1 = np.zeros((n_rows, d), dtype=np.float32)
+        s2 = np.zeros((n_rows, d), dtype=np.float32)
+        np.add.at(s1, seg, vals)
+        np.add.at(s2, seg, vals * vals)
+        mx, mref = np_segment_extremum(MAX, vals, seg, n_rows, nbr)
+        x = self._tower(s1, s2, mx, np.asarray(k_rows, dtype=np.float32))
+        return x, {"s1": s1, "s2": s2, "mx": mx, "mref": mref}
+
+    def np_patch(self, x_rows, aux, k_rows, seg, src, val_old, val_new,
+                 has_old, has_new):
+        R = x_rows.shape[0]
+        s1, s2 = aux["s1"].copy(), aux["s2"].copy()
+        mx, mref = aux["mx"], aux["mref"]
+        vn = np.where(has_new[:, None], val_new, 0.0)
+        vo = np.where(has_old[:, None], val_old, 0.0)
+        np.add.at(s1, seg, vn - vo)
+        np.add.at(s2, seg, vn * vn - vo * vo)
+        # SHRINK classification against the pre-fold max (same invariant
+        # as the monotonic family, but resolved by a whole-row refresh)
+        shrink = (mref[seg] == src[:, None]) & has_old[:, None] \
+            & (~has_new[:, None] | (val_new < mx[seg]))
+        refresh = np.zeros(R, dtype=bool)
+        touched = np.zeros(R, dtype=bool)
+        if seg.size:
+            np.logical_or.at(refresh, seg, shrink.any(axis=1))
+            touched[seg] = True
+        grow = np.where(has_new[:, None], val_new, -np.inf)
+        mx2, mref2 = np_segment_extremum(MAX, grow, seg, R, src,
+                                         base=mx, base_refs=mref)
+        k = np.asarray(k_rows, dtype=np.float32)
+        kk = np.maximum(k, 1.0)[:, None]
+        var = s2 / kk - (s1 / kk) ** 2
+        refresh |= touched & ((var < -self.var_guard).any(axis=1)
+                              | (k <= 0))
+        x2 = self._tower(s1, s2, mx2, k)
+        return x2, {"s1": s1, "s2": s2, "mx": mx2, "mref": mref2}, refresh
+
+    def aggregate_dense(self, stack, k):
+        kf = np.float32(max(k, 1))
+        mean = stack.sum(axis=0) / kf
+        std = np.sqrt(np.maximum((stack * stack).sum(axis=0) / kf
+                                 - mean * mean, 0.0))
+        return np.concatenate([np.log1p(np.float32(max(k, 0))) * mean, std,
+                               stack.max(axis=0)])
+
+    def jnp_reaggregate(self, vals, src, seg, n_rows, k_rows):
+        import jax
+        import jax.numpy as jnp
+        valid = seg < n_rows
+        vc = jnp.where(valid[:, None], vals, 0.0)
+        s1 = jax.ops.segment_sum(vc, seg, num_segments=n_rows + 1)[:n_rows]
+        s2 = jax.ops.segment_sum(vc * vc, seg,
+                                 num_segments=n_rows + 1)[:n_rows]
+        mx, mref = jnp_segment_extremum(MAX, jnp.where(valid[:, None], vals,
+                                                       -jnp.inf),
+                                        seg, n_rows, src)
+        x = self._tower(s1, s2, mx, jnp.asarray(k_rows, jnp.float32), xp=jnp)
+        return x, (s1, s2, mx, mref)
+
+    def gain(self, D, d, kmax, M):
+        return max(float(np.log1p(max(kmax, 0.0))), 1.0) * D
+
+
 SUM = InvertibleAgg("sum")
 MEAN = InvertibleAgg("mean", by_degree=True)
 WSUM = InvertibleAgg("wsum", uses_weights=True)
 MAX = MonotonicAgg("max", sign=1.0)
 MIN = MonotonicAgg("min", sign=-1.0)
+ATTN = AttentionAgg("attn")
+TOPK = TopKAgg("topk")
+PNA = PNAAgg("pna")
 
 AGGREGATORS: dict[str, Aggregator] = {a.name: a for a in
-                                      (SUM, MEAN, WSUM, MAX, MIN)}
+                                      (SUM, MEAN, WSUM, MAX, MIN,
+                                       ATTN, TOPK, PNA)}
 AGGREGATOR_NAMES = tuple(AGGREGATORS)
 
 
@@ -309,3 +757,100 @@ def compute_contributors(agg: MonotonicAgg, H: list[np.ndarray],
             Cl[dst[jj], dd] = src[jj]
         C.append(Cl)
     return C
+
+
+def compute_bounded_aux(agg: BoundedRecomputeAgg, H: list[np.ndarray],
+                        graph) -> list[dict[str, np.ndarray]]:
+    """Derive the bounded family's cached partial state for a
+    bootstrapped/materialized state: one aux dict per layer (``A[0]`` is a
+    placeholder for index alignment with ``S``)."""
+    src, dst, _ = graph.coo()
+    A: list[dict[str, np.ndarray]] = [{}]
+    for l in range(1, len(H)):
+        _, aux = agg.np_reaggregate(H[l - 1], src, dst, graph.n,
+                                    graph.in_degree)
+        A.append(aux)
+    return A
+
+
+# ---------------------------------------------------------------------------
+# Certified error bounds for the bounded family's approximate mode
+# ---------------------------------------------------------------------------
+def _col_abs_sum(w) -> float:
+    """inf-norm Lipschitz constant of ``x -> x @ w``: max column abs-sum."""
+    return float(np.max(np.sum(np.abs(np.asarray(w)), axis=0)))
+
+
+def workload_lipschitz(workload, params_np: list[dict]) -> list[tuple[float, float]]:
+    """Per-layer ``(Lx, Lself)``: inf-norm Lipschitz constants of the
+    UPDATE w.r.t. the neighbor aggregate x and the self embedding h_prev
+    (relu is 1-Lipschitz and drops out)."""
+    out = []
+    for p in params_np:
+        fam = workload.family
+        if fam == "gc":
+            out.append((_col_abs_sum(p["w"]), 0.0))
+        elif fam == "sage":
+            out.append((_col_abs_sum(p["w_nbr"]), _col_abs_sum(p["w_self"])))
+        elif fam == "gin":
+            chain = _col_abs_sum(p["w1"]) * _col_abs_sum(p["w2"])
+            out.append((chain, (1.0 + abs(float(p["eps"]))) * chain))
+        else:
+            raise ValueError(fam)
+    return out
+
+
+def certified_error_bound(workload, params_np: list[dict], eps, M,
+                          kmax: float) -> list[float]:
+    """Forward error recursion for deferred (eps-stale) layer writes.
+
+    ``eps[l]`` is the certified staleness of the *stored* H[l] vs what the
+    engine would have written (eps[0] = eps[L] = 0: features and published
+    embeddings are never deferred); ``M[l]`` a running bound on
+    ``max |H[l]|``; ``kmax`` the max in-degree seen.  Returns per-layer
+    ``E[0..L]``: ``E[l]`` bounds ``|stored H[l] - oracle H[l]|_inf`` per
+    vertex, via ``E_{l+1} = Lx * G(E_l + eps_l) + Lself * (E_l + eps_l)``
+    with the aggregator's certified gain G (sound because a deferred
+    vertex's neighbors aggregated exactly its stored value)."""
+    agg = workload.agg
+    lip = workload_lipschitz(workload, params_np)
+    E = [0.0]
+    for l in range(workload.spec.n_layers):
+        D = E[l] + float(eps[l])
+        Lx, Lself = lip[l]
+        E.append(Lx * agg.gain(D, workload.spec.dims[l], kmax, float(M[l]))
+                 + Lself * D)
+    return E
+
+
+def deferral_budgets(workload, params_np: list[dict], eps, M, kmax: float,
+                     tolerance: float) -> np.ndarray:
+    """Per-layer deferral budgets ``tau[1..L-1]``: the largest per-row
+    write-deferral magnitude at layer l keeping the final-layer certified
+    bound <= tolerance.  ``tau[l] >= eps[l]`` always (re-deferring within
+    the already-certified staleness never raises the bound)."""
+    L = workload.spec.n_layers
+    taus = np.zeros(L + 1, dtype=np.float64)
+    if tolerance <= 0 or L < 2:
+        return taus
+
+    def bound_with(l: int, t: float) -> float:
+        e = np.array(eps, dtype=np.float64)
+        e[l] = max(e[l], t)
+        return certified_error_bound(workload, params_np, e, M, kmax)[-1]
+
+    for l in range(1, L):
+        lo = float(eps[l])
+        hi = max(tolerance, lo, 1e-6)
+        for _ in range(60):  # geometric upper bracket
+            if bound_with(l, hi) > tolerance:
+                break
+            lo, hi = hi, hi * 2.0
+        for _ in range(50):
+            mid = 0.5 * (lo + hi)
+            if bound_with(l, mid) <= tolerance:
+                lo = mid
+            else:
+                hi = mid
+        taus[l] = lo
+    return taus

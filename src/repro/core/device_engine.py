@@ -54,7 +54,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .aggregators import jnp_segment_extremum
+from .aggregators import (MAX, certified_error_bound, deferral_budgets,
+                          jnp_segment_extremum)
 from .graph import _GROW, _MIN_SLACK, DynamicGraph, flat_row_indices
 from .workloads import Workload
 
@@ -179,6 +180,9 @@ class DeviceState(NamedTuple):
     k: jax.Array              # [n] in-degree (maintained on device)
     C: tuple[jax.Array, ...] = ()  # monotonic contributor refs (int32,
     #                                index-aligned with S; () if invertible)
+    A: tuple = ()             # bounded cached partial state: per layer a
+    #                           tuple of arrays in agg.aux_names order
+    #                           (A[0] = () placeholder; () otherwise)
 
 
 class BatchDev(NamedTuple):
@@ -774,6 +778,181 @@ propagate_monotonic_donated = jax.jit(_propagate_monotonic_impl,
                                       donate_argnames=("state",))
 
 
+# ---------------------------------------------------------------------------
+# Bounded-recompute (attention / top-k / PNA) propagation: every affected
+# row re-aggregates over its mirrored in-neighborhood each hop (the device
+# trades the host's PATCH classification for one uniform gather — a fixed
+# dataflow XLA can compile), the cached aux state rides DeviceState through
+# donation + the gated commit, and the frontier stays *filtered* (only
+# changed rows propagate), which is what keeps the device path
+# frontier-proportional rather than RC-shaped.  With ``tolerance > 0`` the
+# per-layer deferral budgets arrive as a dynamic ``taus`` vector (no
+# recompile across tolerance values): interior-hop writes within budget are
+# dropped (the stale store is exactly what downstream reads see), and the
+# per-layer max deferred magnitude / max committed |h| travel back to the
+# host, which owns the certified eps/M/kmax accounting.
+# ---------------------------------------------------------------------------
+def _bounded_hop(workload: Workload, params_l: dict, layer: int, n: int,
+                 state: DeviceState, out_csr: DeviceCSR, in_csr: DeviceCSR,
+                 batch: BatchDev, frontier: jax.Array, patch, tau, *,
+                 r_cap: int, e_cap: int, p_cap: int, h_cap: int,
+                 pallas: bool, interpret: bool):
+    """One bounded hop layer -> layer+1 (reads only); returns the hop patch
+    (rec_idx, x_rows, aux tuple, h_out), the filtered next frontier, the
+    overflow flag, sizes, int counters and (max deferred b, max |h|)."""
+    agg = workload.agg
+    H_pre = state.H[layer]
+    pos_p = _patch_pos(n, patch[0])
+
+    edst, esrc, needed = _expand_frontier_edges(n, out_csr, frontier, e_cap)
+    overflow = needed > e_cap
+
+    all_dst = jnp.concatenate([edst, batch.add_dst, batch.del_dst])
+    if workload.spec.self_dependent:
+        all_dst = jnp.concatenate([all_dst, frontier])
+    rec_idx, pos_r, n_rec = _unique_recipients(n, all_dst, r_cap)
+    overflow |= n_rec > r_cap
+    aff_c = jnp.minimum(rec_idx, n - 1)
+    real_row = rec_idx < n
+    k_rows = _k_rows(n, state, batch, rec_idx, pos_r, r_cap)
+
+    # refresh-all pull: the affected rows' post-batch in-neighborhoods,
+    # post-update layer-l values read through the previous hop's patch
+    degs = jnp.where(real_row, in_csr.length[aff_c], 0)
+    psrc, fid, pvalid, pull_total = _ragged_gather(n, in_csr, aff_c, degs,
+                                                   p_cap)
+    overflow |= pull_total > p_cap
+    hmax = jnp.max(degs)
+    pvals = _patched(n, H_pre, pos_p, patch[1], psrc)
+    pseg = jnp.where(pvalid, fid, r_cap)
+
+    if pallas and agg.name == "pna":
+        # PNA moment gather through the EmbeddingBag Pallas kernel: the
+        # ragged neighborhoods become one [r_cap, h_cap] index rectangle
+        # (sentinel lanes point at a zero row appended to the table) and
+        # s1 = bag-sum of neighbor embeddings is exactly the kernel's
+        # contract; s2 / max+witness stay segment ops on the same pull
+        from repro.kernels.embedding_bag import embedding_bag_pallas
+        overflow |= hmax > h_cap
+        d = H_pre.shape[1]
+        table = jnp.concatenate([H_pre, jnp.zeros((1, d), H_pre.dtype)])
+        p_idx = jnp.where(patch[0] < n, patch[0], n + 1)  # keep row n zero
+        table = table.at[p_idx].set(patch[1], mode="drop")
+        csum = jnp.cumsum(degs)
+        off = jnp.arange(p_cap, dtype=jnp.int32) - (csum[fid] - degs[fid])
+        idx = jnp.full((r_cap, h_cap), n, dtype=jnp.int32)
+        idx = idx.at[jnp.where(pvalid, fid, r_cap),
+                     jnp.where(pvalid, off, 0)].set(
+            jnp.minimum(psrc, n).astype(jnp.int32), mode="drop")
+        s1 = embedding_bag_pallas(idx, table, interpret=interpret)
+        vc = jnp.where(pvalid[:, None], pvals, 0.0)
+        s2 = jax.ops.segment_sum(vc * vc, pseg,
+                                 num_segments=r_cap + 1)[:r_cap]
+        mx, mref = jnp_segment_extremum(
+            MAX, jnp.where(pvalid[:, None], pvals, -jnp.inf), pseg, r_cap,
+            psrc)
+        x_rows = agg._tower(s1, s2, mx, k_rows, xp=jnp)
+        aux_t = (s1, s2, mx, mref)
+    else:
+        x_rows, aux_t = agg.jnp_reaggregate(pvals, psrc, pseg, r_cap, k_rows)
+
+    # ---- apply + certified deferral + filtered propagation ---------------
+    h_prev = _patched(n, H_pre, pos_p, patch[1], rec_idx)
+    x = workload.normalize(x_rows, k_rows)
+    h_new = workload.update_fn(layer)(params_l, h_prev, x)
+    stored = state.H[layer + 1][aff_c]
+    changed = jnp.any(h_new != stored, axis=1) & real_row
+    b = jnp.max(jnp.abs(h_new - stored), axis=1)
+    defer = changed & (b <= tau)  # tau = 0 at the last hop: never defers
+    write = changed & ~defer
+    viol = changed & ~defer & (tau > 0)
+    h_out = jnp.where(write[:, None], h_new, stored)
+    frontier_next = jnp.where(write, rec_idx, n)
+    i_stats = jnp.stack([real_row.sum().astype(jnp.int32),
+                         defer.sum().astype(jnp.int32),
+                         viol.sum().astype(jnp.int32)])
+    f_stats = jnp.stack([jnp.max(jnp.where(defer, b, 0.0)),
+                         jnp.max(jnp.where(write,
+                                           jnp.max(jnp.abs(h_new), axis=1),
+                                           0.0))])
+    sizes = jnp.stack([n_rec.astype(jnp.int32), needed.astype(jnp.int32),
+                       pull_total.astype(jnp.int32), hmax.astype(jnp.int32)])
+    return (rec_idx, x_rows, aux_t, h_out), frontier_next, overflow, sizes, \
+        i_stats, f_stats
+
+
+def _propagate_bounded_impl(workload: Workload, n: int,
+                            caps: tuple[tuple[int, int, int, int], ...],
+                            params: list[dict], state: DeviceState,
+                            out_csr: DeviceCSR, in_csr: DeviceCSR,
+                            batch: BatchDev, taus: jax.Array, *,
+                            pallas: bool = False, interpret: bool = True):
+    """L-hop bounded (attention/top-k/PNA) propagation of a routed batch.
+
+    caps[l] = (row_cap, edge_cap, pull_cap, indeg_cap); pull_cap bounds the
+    affected rows' total in-degree, indeg_cap the max per-row in-degree
+    (the EmbeddingBag rectangle width — only enforced on the Pallas PNA
+    path).  Returns (new_state, final frontier, overflow, sizes [L, 4],
+    ([rows_reaggregated, deferred_rows, bound_violations],
+    per-layer [L+1, 2] (max deferred b, max committed |h|))) — same
+    deferred phase-1/phase-2 gated commit as the other families, so an
+    overflowing attempt commits nothing even under buffer donation.
+    """
+    L = workload.spec.n_layers
+    fv = batch.feat_idx
+    old = state.H[0][jnp.minimum(fv, n - 1)]
+    changed0 = jnp.any(batch.feat_val != old, axis=1) & (fv < n)
+    frontier = jnp.where(changed0, fv, n)
+    patch = (fv, batch.feat_val)
+    overflow = jnp.zeros((), dtype=bool)
+    i_stats = jnp.zeros((3,), dtype=jnp.int32)
+    f_rows = [jnp.stack([jnp.float32(0.0),
+                         jnp.max(jnp.abs(batch.feat_val)
+                                 * (fv < n)[:, None].astype(jnp.float32))])]
+    hops = []
+    sizes = []
+    for l in range(L):
+        r_cap, e_cap, p_cap, h_cap = caps[l]
+        hop_patch, frontier, ovf, hop_sizes, hop_i, hop_f = _bounded_hop(
+            workload, params[l], l, n, state, out_csr, in_csr, batch,
+            frontier, patch, taus[l + 1], r_cap=r_cap, e_cap=e_cap,
+            p_cap=p_cap, h_cap=h_cap, pallas=pallas, interpret=interpret)
+        overflow |= ovf
+        i_stats = i_stats + hop_i
+        hops.append(hop_patch)
+        sizes.append(hop_sizes)
+        f_rows.append(hop_f)
+        patch = (hop_patch[0], hop_patch[3])
+
+    # ---- overflow-gated commit -------------------------------------------
+    ok = ~overflow
+    gate = lambda idx: jnp.where(ok, idx, n)  # noqa: E731
+    H = list(state.H)
+    S = list(state.S)
+    A = list(state.A)
+    H[0] = H[0].at[gate(fv)].set(batch.feat_val, mode="drop")
+    for l, (rec, x_rows, aux_t, h_out) in enumerate(hops):
+        S[l + 1] = S[l + 1].at[gate(rec)].set(x_rows, mode="drop")
+        H[l + 1] = H[l + 1].at[gate(rec)].set(h_out, mode="drop")
+        A[l + 1] = tuple(a.at[gate(rec)].set(v, mode="drop")
+                         for a, v in zip(A[l + 1], aux_t))
+    k = state.k.at[gate(batch.add_dst)].add(1.0, mode="drop") \
+               .at[gate(batch.del_dst)].add(-1.0, mode="drop")
+    new_state = DeviceState(H=tuple(H), S=tuple(S), k=k, C=state.C,
+                            A=tuple(A))
+    okf = ok.astype(jnp.float32)
+    return new_state, jnp.where(ok, frontier, n), overflow, \
+        jnp.stack(sizes), (i_stats * ok.astype(jnp.int32),
+                           jnp.stack(f_rows) * okf)
+
+
+propagate_bounded = jax.jit(_propagate_bounded_impl,
+                            static_argnames=_PROP_STATIC)
+propagate_bounded_donated = jax.jit(_propagate_bounded_impl,
+                                    static_argnames=_PROP_STATIC,
+                                    donate_argnames=("state",))
+
+
 class DeviceEngine:
     """Host driver around the jitted propagation with a warm bucket ladder.
 
@@ -797,20 +976,43 @@ class DeviceEngine:
                  graph: DynamicGraph, state_np, *, min_bucket: int = 64,
                  donate: bool = True, use_pallas: bool = False,
                  async_dispatch: bool = False, debug_checks: bool = False,
-                 warm: bool = True):
+                 warm: bool = True, tolerance: float = 0.0):
         from repro.utils import next_bucket
         self._next_bucket = next_bucket
         self.workload = workload
         self.params = [{k: jnp.asarray(v) for k, v in p.items()} for p in params]
+        self._params_np = [{k: np.asarray(v) for k, v in p.items()}
+                           for p in params]
         self.graph = graph
         self.n = graph.n
-        self.monotonic = not workload.agg.invertible
+        self.monotonic = workload.agg.algebra == "monotonic"
+        self.bounded = workload.agg.algebra == "bounded"
+        self.tolerance = float(tolerance)
+        if self.tolerance > 0 and not self.bounded:
+            raise ValueError(
+                f"tolerance > 0 requires a bounded-recompute workload; "
+                f"{workload.spec.name!r} uses the "
+                f"{workload.agg.algebra} family")
+        aux_names = workload.agg.aux_names if self.bounded else ()
         self.state = DeviceState(
             H=tuple(jnp.asarray(h) for h in state_np.H),
             S=tuple(jnp.asarray(s) for s in state_np.S),
             k=jnp.asarray(graph.in_degree),
             C=tuple(jnp.asarray(c, dtype=jnp.int32) for c in state_np.C)
-            if state_np.C is not None else ())
+            if state_np.C is not None else (),
+            A=tuple(tuple(jnp.asarray(a[nm]) for nm in aux_names)
+                    if a else () for a in state_np.A)
+            if getattr(state_np, "A", None) is not None else ())
+        if self.bounded:
+            # host-owned certified-bound accounting (see engine.py): eps is
+            # authoritative state (rides checkpoints via InferenceState),
+            # M/kmax are re-derived bounds grown per batch
+            eps = getattr(state_np, "eps", None)
+            self._eps = np.array(eps, dtype=np.float64) if eps is not None \
+                else np.zeros(workload.spec.n_layers + 1, dtype=np.float64)
+            self._M = np.array([float(np.abs(h).max()) if h.size else 0.0
+                                for h in state_np.H], dtype=np.float64)
+            self._kmax = float(graph.in_degree.max()) if graph.n else 0.0
         self.min_bucket = min_bucket
         self.donate = donate
         self.use_pallas = use_pallas
@@ -818,7 +1020,8 @@ class DeviceEngine:
         self.debug_checks = debug_checks
         self.interpret = jax.default_backend() != "tpu"
         self.out_mirror = DeviceCSRMirror(graph.out)
-        self.in_mirror = DeviceCSRMirror(graph.inn) if self.monotonic else None
+        self.in_mirror = DeviceCSRMirror(graph.inn) \
+            if (self.monotonic or self.bounded) else None
         self._bucket = min_bucket
         self._rung = 0          # transient retry boost (0 once sizes known)
         self._hw = None         # per-hop high-water marks: [L, 3] (r, e, 0)
@@ -833,8 +1036,31 @@ class DeviceEngine:
         self.last_rows_reaggregated = 0
         self.last_dims_reaggregated = 0
         self.last_recover_hits = 0
+        self.last_patch_events = 0      # bounded: device is refresh-all (0)
+        self.last_deferred_rows = 0
+        self.last_bound_violations = 0
         if warm:
             self._warm()
+
+    def error_bound(self) -> np.ndarray:
+        """Certified per-vertex inf-norm bound on published H[L] vs the
+        full oracle (zeros unless deferrals have happened)."""
+        if not self.bounded:
+            return np.zeros(self.n, dtype=np.float32)
+        E = certified_error_bound(self.workload, self._params_np, self._eps,
+                                  self._M, self._kmax)
+        return np.full(self.n, E[-1], dtype=np.float32)
+
+    def _taus(self) -> jax.Array:
+        """Per-layer deferral budgets for the next dispatch (zeros at
+        tolerance=0: the jitted comparison never defers)."""
+        L = self.workload.spec.n_layers
+        if self.bounded and self.tolerance > 0:
+            t = deferral_budgets(self.workload, self._params_np, self._eps,
+                                 self._M, self._kmax, self.tolerance)
+        else:
+            t = np.zeros(L + 1, dtype=np.float64)
+        return jnp.asarray(t.astype(np.float32))
 
     # -- cap schedule ------------------------------------------------------
     _HEADROOM = 1.25  # slack over the high-water mark before bucketing
@@ -874,14 +1100,25 @@ class DeviceEngine:
                                   p_max),
                               min(nb(chans[3], minimum=self.min_bucket),
                                   pd_max))
+                elif self.bounded:
+                    # pull channel: affected rows' total in-degree (<= |E|);
+                    # indeg channel: max per-row in-degree (<= n)
+                    cap_l += (min(nb(chans[2], minimum=self.min_bucket),
+                                  e_max),
+                              min(nb(chans[3], minimum=self.min_bucket),
+                                  n_b))
                 caps.append(cap_l)
             return tuple(caps)
         r = min(nb(self._bucket * scale, minimum=self._bucket), n_b)
         e = min(nb(4 * r), e_max)
         rr, ee = r, e
         for _ in range(L):
-            caps.append((rr, ee, min(ee, p_max), min(ee, pd_max))
-                        if self.monotonic else (rr, ee))
+            if self.monotonic:
+                caps.append((rr, ee, min(ee, p_max), min(ee, pd_max)))
+            elif self.bounded:
+                caps.append((rr, ee, min(ee, e_max), min(ee, n_b)))
+            else:
+                caps.append((rr, ee))
             rr = min(nb(rr * 4), n_b)
             ee = min(nb(ee * 4), e_max)
         return tuple(caps)
@@ -943,6 +1180,8 @@ class DeviceEngine:
         n = self.n
         d0 = int(self.state.H[0].shape[1])
         adds, dels = self.graph.apply_topology(batch.edges)
+        if self.bounded and n:
+            self._kmax = max(self._kmax, float(self.graph.in_degree.max()))
         fa = np.array([f.vertex for f in batch.features], dtype=np.int32)
         fx = (np.stack([f.value for f in batch.features]).astype(np.float32)
               if batch.features else np.zeros((0, d0), np.float32))
@@ -970,11 +1209,19 @@ class DeviceEngine:
         out_rows = np.unique(np.array([e.src for e in touched], np.int64)) \
             if touched else np.empty(0, np.int64)
         in_rows = np.unique(np.array([e.dst for e in touched], np.int64)) \
-            if touched and self.monotonic else np.empty(0, np.int64)
+            if touched and self.in_mirror is not None \
+            else np.empty(0, np.int64)
         return dev_batch, out_rows, in_rows
 
     # -- dispatch / resolve ------------------------------------------------
     def _run(self, dev_batch: BatchDev, caps: tuple):
+        if self.bounded:
+            fn = propagate_bounded_donated if self.donate \
+                else propagate_bounded
+            return fn(self.workload, self.n, caps, self.params, self.state,
+                      self.out_mirror.device(), self.in_mirror.device(),
+                      dev_batch, self._taus(), pallas=self.use_pallas,
+                      interpret=self.interpret)
         if self.monotonic:
             fn = propagate_monotonic_donated if self.donate \
                 else propagate_monotonic
@@ -1035,11 +1282,22 @@ class DeviceEngine:
         f = np.asarray(final)
         self._last_affected = f[f < self.n].astype(np.int64)
         if stats is not None:
-            s = np.asarray(stats)
-            self.last_shrink_events = int(s[0])
-            self.last_rows_reaggregated = int(s[1])
-            self.last_dims_reaggregated = int(s[2])
-            self.last_recover_hits = int(s[3])
+            if self.bounded:
+                i_s = np.asarray(stats[0])
+                f_s = np.asarray(stats[1])
+                self.last_rows_reaggregated = int(i_s[0])
+                self.last_deferred_rows = int(i_s[1])
+                self.last_bound_violations = int(i_s[2])
+                self.last_patch_events = 0
+                self._eps = np.maximum(self._eps,
+                                       f_s[:, 0].astype(np.float64))
+                self._M = np.maximum(self._M, f_s[:, 1].astype(np.float64))
+            else:
+                s = np.asarray(stats)
+                self.last_shrink_events = int(s[0])
+                self.last_rows_reaggregated = int(s[1])
+                self.last_dims_reaggregated = int(s[2])
+                self.last_recover_hits = int(s[3])
         if k_check is not None:
             np.testing.assert_allclose(np.asarray(self.state.k), k_check,
                                        err_msg="device k drifted from host "

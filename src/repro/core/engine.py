@@ -43,7 +43,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .aggregators import np_segment_extremum, np_shrink_dims
+from .aggregators import (certified_error_bound, deferral_budgets,
+                          np_segment_extremum, np_shrink_dims)
 from .graph import DynamicGraph, EdgeUpdate, UpdateBatch, flat_row_indices
 from .state import InferenceState
 from .workloads import Workload
@@ -61,9 +62,12 @@ class BatchStats:
     wall_seconds: float = 0.0
     final_affected: np.ndarray | None = None
     shrink_events: int = 0      # monotonic: messages classified SHRINK
-    rows_reaggregated: int = 0  # monotonic: rows with >=1 re-aggregated dim
+    rows_reaggregated: int = 0  # monotonic/bounded: rows re-aggregated
     dims_reaggregated: int = 0  # monotonic: (row, dim) cells gathered
     recover_hits: int = 0       # monotonic: shrunk dims re-covered probe-free
+    patch_events: int = 0       # bounded: touched rows absorbed as O(1) PATCH
+    bound_violations: int = 0   # bounded: deferral denied, force-propagated
+    deferred_rows: int = 0      # bounded: writes deferred under tolerance
 
     @property
     def total_affected(self) -> int:
@@ -89,13 +93,37 @@ def _edge_arrays(edges: list[EdgeUpdate]) -> tuple[np.ndarray, np.ndarray, np.nd
 
 class _EngineBase:
     def __init__(self, workload: Workload, params_np: list[dict],
-                 graph: DynamicGraph, state: InferenceState):
+                 graph: DynamicGraph, state: InferenceState, *,
+                 tolerance: float = 0.0):
         self.workload = workload
         self.params = params_np
         self.graph = graph
         self.state = state
+        self.tolerance = float(tolerance)
+        if self.tolerance > 0 and not workload.agg.tracks_aux:
+            raise ValueError(
+                f"tolerance > 0 requires a bounded-recompute workload; "
+                f"{workload.spec.name!r} uses the "
+                f"{workload.agg.algebra} family")
         # dense vertex->frontier-slot map reused across hops (reset after use)
         self._pos = np.full(graph.n, -1, dtype=np.int64)
+        if workload.agg.tracks_aux:
+            # running bounds feeding the certified error recursion: max |H_l|
+            # per layer and max in-degree (re-derived at construction — i.e.
+            # at engine swap too — and grown monotonically per batch)
+            self._M = np.array([float(np.abs(h).max()) if h.size else 0.0
+                                for h in state.H], dtype=np.float64)
+            self._kmax = float(graph.in_degree.max()) if graph.n else 0.0
+
+    def error_bound(self) -> np.ndarray:
+        """Certified per-vertex inf-norm bound on published H[L] vs the
+        full oracle (zeros unless deferrals have happened)."""
+        n = self.graph.n
+        if not self.workload.agg.tracks_aux or self.state.eps is None:
+            return np.zeros(n, dtype=_F)
+        E = certified_error_bound(self.workload, self.params, self.state.eps,
+                                  self._M, self._kmax)
+        return np.full(n, E[-1], dtype=_F)
 
     # -- shared: apply feature updates at hop 0 ---------------------------
     def _apply_features(self, batch: UpdateBatch) -> tuple[np.ndarray, np.ndarray]:
@@ -116,8 +144,11 @@ class RippleEngine(_EngineBase):
     """The paper's incremental engine (single machine)."""
 
     def apply_batch(self, batch: UpdateBatch) -> BatchStats:
-        if self.workload.agg.invertible:
+        algebra = self.workload.agg.algebra
+        if algebra == "invertible":
             return self._apply_invertible(batch)
+        if algebra == "bounded":
+            return self._apply_bounded(batch)
         return self._apply_monotonic(batch)
 
     # -- invertible aggregators: delta mailboxes --------------------------
@@ -340,6 +371,190 @@ class RippleEngine(_EngineBase):
         stats.wall_seconds = time.perf_counter() - t0
         return stats
 
+    # -- bounded aggregators: PATCH/REFRESH + certified deferral ----------
+    def _apply_bounded(self, batch: UpdateBatch) -> BatchStats:
+        """Incremental attention / top-k / PNA (see aggregators docstring).
+
+        Per hop the frontier's out-edges under the current adjacency plus
+        the batch's add/delete corrections form one TRUE message view
+        ``(dst, src, has_old, has_new, val_old, val_new)``: each message
+        states exactly how one in-neighbor contribution transitioned, with
+        ``val_old`` taken from the pre-write frontier values (what the
+        destination's cache actually aggregated) and newly-added edges
+        flagged ``has_old=False`` even when their source sits in the
+        frontier.  The aggregator classifies touched rows PATCH (O(1)
+        cache absorb) vs REFRESH (re-aggregate over the row's current
+        in-neighborhood); only rows whose embedding changed propagate.
+
+        With ``tolerance > 0``, interior-layer writes whose magnitude fits
+        the layer's certified deferral budget are skipped entirely (the
+        stale store is exactly what downstream caches aggregated, so the
+        caches stay exact and the next touch carries the accumulated
+        correction); a changed row above the budget is a BOUND-VIOLATION
+        and is force-written + propagated.  ``state.eps`` accumulates the
+        certified staleness per layer for :meth:`error_bound`.
+        """
+        t0 = time.perf_counter()
+        stats = BatchStats()
+        g, st, wl = self.graph, self.state, self.workload
+        agg = wl.agg
+        L = wl.spec.n_layers
+
+        adds, dels = g.apply_topology(batch.edges)
+        st.k = g.in_degree
+        add_src, add_dst, _ = _edge_arrays(adds)
+        del_src, del_dst, _ = _edge_arrays(dels)
+        if g.n:
+            self._kmax = max(self._kmax, float(g.in_degree.max()))
+        add_pair = add_src * g.n + add_dst
+
+        frontier, delta0 = self._apply_features(batch)
+        if frontier.size:  # hop-0 filtering: no-op feature writes stop here
+            keep0 = np.any(delta0 != 0, axis=1)
+            frontier, delta0 = frontier[keep0], delta0[keep0]
+        front_old = st.H[0][frontier] - delta0
+        if frontier.size:
+            self._M[0] = max(self._M[0], float(np.abs(st.H[0][frontier]).max()))
+        stats.affected_per_hop.append(len(frontier))
+
+        taus = deferral_budgets(wl, self.params, st.eps, self._M, self._kmax,
+                                self.tolerance) if self.tolerance > 0 else None
+
+        for l in range(L):
+            H_l = st.H[l]
+            d = H_l.shape[1]
+
+            # ---- TRUE message view (dst, src, old -> new transition) -----
+            if frontier.size:
+                degs = g.out.length[frontier]
+                flat = flat_row_indices(g.out.start[frontier], degs)
+                m_dst = g.out.col[flat]
+                rep = np.repeat(np.arange(frontier.size), degs)
+                m_src = frontier[rep]
+                m_new = H_l[m_src]
+                m_old = front_old[rep]
+                # an edge added this batch never contributed val_old: the
+                # destination cache was built under the old adjacency
+                m_has_old = ~np.isin(m_src * g.n + m_dst, add_pair) \
+                    if add_pair.size else np.ones(m_dst.size, dtype=bool)
+            else:
+                m_dst = m_src = np.empty(0, dtype=np.int64)
+                m_new = m_old = np.empty((0, d), dtype=_F)
+                m_has_old = np.empty(0, dtype=bool)
+
+            self._pos[frontier] = np.arange(frontier.size)
+            # add corrections for non-frontier sources (frontier sources'
+            # added edges already ride the scan with has_old=False)
+            if add_src.size:
+                a_keep = self._pos[add_src] < 0
+                a_src, a_dst = add_src[a_keep], add_dst[a_keep]
+                a_new = H_l[a_src]
+            else:
+                a_src = a_dst = np.empty(0, dtype=np.int64)
+                a_new = np.empty((0, d), dtype=_F)
+            # delete corrections: retract what the cache aggregated — the
+            # pre-write value for frontier sources
+            if del_src.size:
+                d_old = H_l[del_src].copy()
+                dpos = self._pos[del_src]
+                hit = dpos >= 0
+                d_old[hit] = front_old[dpos[hit]]
+            else:
+                d_old = np.empty((0, d), dtype=_F)
+            self._pos[frontier] = -1
+
+            msg_dst = np.concatenate([m_dst, a_dst, del_dst])
+            msg_src = np.concatenate([m_src, a_src, del_src])
+            val_old = np.concatenate([m_old, np.zeros_like(a_new), d_old])
+            val_new = np.concatenate([m_new, a_new, np.zeros_like(d_old)])
+            has_old = np.concatenate([m_has_old,
+                                      np.zeros(a_dst.size, dtype=bool),
+                                      np.ones(del_dst.size, dtype=bool)])
+            has_new = np.concatenate([np.ones(m_dst.size, dtype=bool),
+                                      np.ones(a_dst.size, dtype=bool),
+                                      np.zeros(del_dst.size, dtype=bool)])
+            stats.messages_per_hop.append(int(msg_dst.size))
+
+            affected = np.unique(msg_dst)
+            if wl.spec.self_dependent and frontier.size:
+                affected = np.union1d(affected, frontier)
+            stats.affected_per_hop.append(int(affected.size))
+            if affected.size == 0:
+                frontier = affected
+                front_old = np.empty((0, st.H[l + 1].shape[1]), dtype=_F)
+                continue
+
+            # ---- classify + patch the touched rows' cached state ---------
+            self._pos[affected] = np.arange(affected.size)
+            slot = self._pos[msg_dst]
+            self._pos[affected] = -1
+            x_rows = st.S[l + 1][affected]
+            aux_rows = {nm: st.A[l + 1][nm][affected] for nm in agg.aux_names}
+            k_rows = st.k[affected]
+            touched = np.zeros(affected.size, dtype=bool)
+            touched[slot] = True
+
+            x2, aux2, refresh = agg.np_patch(x_rows, aux_rows, k_rows, slot,
+                                             msg_src, val_old, val_new,
+                                             has_old, has_new)
+            stats.numeric_ops += int(msg_dst.size)
+            # untouched rows (self-dependent union) keep their state
+            # bit-identical — a patch round-trip may introduce float noise
+            x_new = np.where(touched[:, None], x2, x_rows)
+            aux_new = {}
+            for nm in agg.aux_names:
+                mask = touched if aux2[nm].ndim == 1 else touched[:, None]
+                aux_new[nm] = np.where(mask, aux2[nm], aux_rows[nm])
+
+            # ---- REFRESH: bounded recompute of cache-invalidated rows ----
+            r_idx = np.nonzero(refresh)[0]
+            stats.patch_events += int((touched & ~refresh).sum())
+            if r_idx.size:
+                rows = affected[r_idx]
+                in_degs = g.inn.length[rows]
+                flat_in = flat_row_indices(g.inn.start[rows], in_degs)
+                nbr = g.inn.col[flat_in]
+                seg = np.repeat(np.arange(r_idx.size), in_degs)
+                x_re, aux_re = agg.np_reaggregate(H_l, nbr, seg, r_idx.size,
+                                                  st.k[rows])
+                x_new[r_idx] = x_re
+                for nm in agg.aux_names:
+                    aux_new[nm][r_idx] = aux_re[nm]
+                stats.numeric_ops += int(in_degs.sum())
+                stats.rows_reaggregated += int(r_idx.size)
+
+            st.S[l + 1][affected] = x_new
+            for nm in agg.aux_names:
+                st.A[l + 1][nm][affected] = aux_new[nm]
+
+            # ---- apply + certified deferral + filtered propagation -------
+            h_new = _np_update(wl, self.params, l, H_l[affected], x_new)
+            h_stored = st.H[l + 1][affected]
+            changed = np.any(h_new != h_stored, axis=1)
+            if taus is not None and l + 1 < L:
+                b = np.max(np.abs(h_new - h_stored), axis=1)
+                defer = changed & (b <= taus[l + 1])
+                viol = changed & ~defer
+                stats.deferred_rows += int(defer.sum())
+                stats.bound_violations += int(viol.sum())
+                if defer.any():
+                    st.eps[l + 1] = max(float(st.eps[l + 1]),
+                                        float(b[defer].max()))
+            else:
+                defer = np.zeros_like(changed)
+
+            write = changed & ~defer
+            front_old = h_stored[write]
+            if write.any():
+                st.H[l + 1][affected[write]] = h_new[write]
+                self._M[l + 1] = max(self._M[l + 1],
+                                     float(np.abs(h_new[write]).max()))
+            frontier = affected[write]
+
+        stats.final_affected = frontier
+        stats.wall_seconds = time.perf_counter() - t0
+        return stats
+
 
 class RecomputeEngine(_EngineBase):
     """Layer-wise recompute scoped to the affected neighborhood ("RC", §4.2).
@@ -393,6 +608,13 @@ class RecomputeEngine(_EngineBase):
                 w = g.inn.w[flat] if wl.spec.weighted else np.ones(total, dtype=_F)
                 S_rows = np.zeros((affected.size, st.H[l].shape[1]), dtype=_F)
                 np.add.at(S_rows, seg, st.H[l][nbr] * w[:, None])
+            elif agg.algebra == "bounded":
+                S_rows, aux = agg.np_reaggregate(st.H[l], nbr, seg,
+                                                 affected.size,
+                                                 st.k[affected])
+                for nm in agg.aux_names:
+                    st.A[l + 1][nm][affected] = aux[nm]
+                stats.rows_reaggregated += int(affected.size)
             else:
                 S_rows, C_rows = np_segment_extremum(agg, st.H[l][nbr], seg,
                                                      affected.size, nbr)

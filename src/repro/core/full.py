@@ -23,11 +23,18 @@ def aggregate_all(workload: Workload, h: jax.Array, src: jax.Array,
     """One dense segment reduction over all edges, per the workload's
     aggregator: segment-sum of w_uv * h[u] for the invertible family,
     segment-max/min of h[u] for the monotonic family (empty rows hold the
-    aggregator identity, +/-inf)."""
+    aggregator identity, +/-inf), and the aggregator's own segment
+    reaggregation for the bounded family (whose S stores the normalized
+    aggregate directly)."""
     agg = workload.agg
     if agg.invertible:
         msgs = h[src] * w[:, None]
         return jax.ops.segment_sum(msgs, dst, num_segments=n)
+    if agg.algebra == "bounded":
+        k = jax.ops.segment_sum(jnp.ones_like(dst, dtype=h.dtype), dst,
+                                num_segments=n)
+        x, _ = agg.jnp_reaggregate(h[src], src, dst, n, k)
+        return x
     return agg.segment_jnp(h[src], dst, n)
 
 

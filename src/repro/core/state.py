@@ -18,7 +18,8 @@ from dataclasses import dataclass
 import jax
 import numpy as np
 
-from .aggregators import MonotonicAgg, compute_contributors
+from .aggregators import (MonotonicAgg, compute_bounded_aux,
+                          compute_contributors)
 from .full import full_inference
 from .graph import DynamicGraph
 from .workloads import Workload
@@ -33,6 +34,12 @@ class InferenceState:
     k: np.ndarray        # in-degree (float32), shared across layers
     C: list[np.ndarray] | None = None  # C[1..L]: monotonic contributor refs
     #                                    (int32, -1 = empty; None if invertible)
+    A: list[dict] | None = None  # A[1..L]: bounded-family cached partial
+    #                              state (softmax normalizers, thresholds,
+    #                              moments); A[0] = {} placeholder
+    eps: np.ndarray | None = None  # [L+1]: certified staleness of stored
+    #                                H[l] under tolerance>0 deferral
+    #                                (eps[0] = eps[L] = 0 always)
 
     @classmethod
     def bootstrap(cls, workload: Workload, params: list[dict],
@@ -45,14 +52,22 @@ class InferenceState:
         agg = workload.agg
         C = compute_contributors(agg, H, S, graph) \
             if isinstance(agg, MonotonicAgg) else None
-        return cls(H=H, S=S, k=graph.in_degree.copy(), C=C)
+        A = compute_bounded_aux(agg, H, graph) if agg.tracks_aux else None
+        eps = np.zeros(workload.spec.n_layers + 1, dtype=np.float32) \
+            if agg.tracks_aux else None
+        return cls(H=H, S=S, k=graph.in_degree.copy(), C=C, A=A, eps=eps)
 
     def clone(self) -> "InferenceState":
         return InferenceState(H=[h.copy() for h in self.H],
                               S=[s.copy() for s in self.S],
                               k=self.k.copy(),
                               C=None if self.C is None
-                              else [c.copy() for c in self.C])
+                              else [c.copy() for c in self.C],
+                              A=None if self.A is None
+                              else [{k_: v.copy() for k_, v in a.items()}
+                                    for a in self.A],
+                              eps=None if self.eps is None
+                              else self.eps.copy())
 
     @property
     def n(self) -> int:
@@ -64,7 +79,10 @@ class InferenceState:
     def nbytes(self) -> int:
         return (sum(h.nbytes for h in self.H) + sum(s.nbytes for s in self.S)
                 + self.k.nbytes
-                + (sum(c.nbytes for c in self.C) if self.C else 0))
+                + (sum(c.nbytes for c in self.C) if self.C else 0)
+                + (sum(v.nbytes for a in self.A for v in a.values())
+                   if self.A else 0)
+                + (self.eps.nbytes if self.eps is not None else 0))
 
 
 def params_to_numpy(params: list[dict]) -> list[dict]:

@@ -34,12 +34,23 @@ class VertexWiseEngine:
             stack = np.stack([self._h(int(u), layer - 1) for u in nbrs])
             if self.wl.spec.weighted:
                 stack = stack * w[:, None]
-            S = stack.sum(axis=0) if agg.invertible \
-                else agg.ufunc.reduce(stack, axis=0)
+            if agg.invertible:
+                S = stack.sum(axis=0)
+            elif agg.algebra == "bounded":
+                S = agg.aggregate_dense(stack, nbrs.size)
+            else:
+                S = agg.ufunc.reduce(stack, axis=0)
             self.ops += nbrs.size
         else:
-            S = np.full_like(self._h(v, layer - 1),
-                             0.0 if agg.invertible else agg.identity)
+            d_prev = self._h(v, layer - 1).shape[-1]
+            if agg.algebra == "bounded":
+                # bounded S is the normalized aggregate (x_multiplier wide);
+                # empty rows read as zero across the whole tower
+                S = np.zeros(d_prev * agg.x_multiplier, dtype=np.float32)
+            else:
+                S = np.full(d_prev,
+                            0.0 if agg.invertible else agg.identity,
+                            dtype=np.float32)
         h_prev = self._h(v, layer - 1)
         xagg = _np_normalize(self.wl, S[None, :],
                              np.array([self.g.in_degree[v]]))[0]

@@ -7,6 +7,8 @@ GI-S   GINConv + sum              h^l = MLP_l((1+eps) h^{l-1} + x^l)
 GC-W   GraphConv + weighted sum   x^l = sum_j alpha_ij h_j
 GS-MAX GraphSAGE + max            x^l = max_j h_j   (elementwise)
 GC-MIN GraphConv + min            x^l = min_j h_j   (elementwise)
+GA-S   GraphSAGE + attention      x^l = sum_j softmax_j(logit(h_j)) h_j
+GP-M   GraphConv + PNA tower      x^l = [log1p(k)*mean_j, std_j, max_j] h_j
 
 where S^l is the *unnormalized* aggregate of h^{l-1} over in-neighbors and
 x^l its normalized form.  Storing (S, k) instead of x keeps ``mean`` exact
@@ -73,7 +75,11 @@ class WorkloadSpec:
 
     @property
     def monotonic(self) -> bool:
-        return not get_aggregator(self.aggregator).invertible
+        return get_aggregator(self.aggregator).algebra == "monotonic"
+
+    @property
+    def bounded(self) -> bool:
+        return get_aggregator(self.aggregator).algebra == "bounded"
 
 
 @dataclass(frozen=True)
@@ -88,22 +94,27 @@ class Workload:
 
     def init_params(self, key: jax.Array) -> list[dict]:
         dims = self.spec.dims
+        # the bounded family's PNA tower widens the neighbor aggregate x
+        # (x_multiplier dims per input dim) — only x-consuming weights grow
+        mult = self.agg.x_multiplier
         params = []
         for l in range(self.spec.n_layers):
             d_in, d_out = dims[l], dims[l + 1]
+            d_x = d_in * mult
             key, *ks = jax.random.split(key, 6)
-            scale = 1.0 / np.sqrt(d_in)
+            scale = 1.0 / np.sqrt(d_x)
             if self.family == "gc":
-                p = {"w": jax.random.normal(ks[0], (d_in, d_out)) * scale,
+                p = {"w": jax.random.normal(ks[0], (d_x, d_out)) * scale,
                      "b": jnp.zeros((d_out,))}
             elif self.family == "sage":
-                p = {"w_self": jax.random.normal(ks[0], (d_in, d_out)) * scale,
-                     "w_nbr": jax.random.normal(ks[1], (d_in, d_out)) * scale,
+                p = {"w_self": jax.random.normal(ks[0], (d_in, d_out))
+                     * (1.0 / np.sqrt(d_in)),
+                     "w_nbr": jax.random.normal(ks[1], (d_x, d_out)) * scale,
                      "b": jnp.zeros((d_out,))}
             elif self.family == "gin":
                 d_hid = d_out
                 p = {"eps": jnp.zeros(()),
-                     "w1": jax.random.normal(ks[0], (d_in, d_hid)) * scale,
+                     "w1": jax.random.normal(ks[0], (d_x, d_hid)) * scale,
                      "b1": jnp.zeros((d_hid,)),
                      "w2": jax.random.normal(ks[1], (d_hid, d_out)) * (1.0 / np.sqrt(d_hid)),
                      "b2": jnp.zeros((d_out,))}
@@ -131,13 +142,16 @@ _WORKLOAD_TABLE = {
     "gc-w": ("gc", "wsum"),
     "gs-max": ("sage", "max"),
     "gc-min": ("gc", "min"),
+    "ga-s": ("sage", "attn"),
+    "gp-m": ("gc", "pna"),
 }
 
 
 def make_workload(name: str, n_layers: int = 2, d_in: int = 32,
                   d_hidden: int = 32, n_classes: int = 8) -> Workload:
     """Factory for the registered workloads: the paper's five (gc-s, gs-s,
-    gc-m, gi-s, gc-w) plus the monotonic pair (gs-max, gc-min)."""
+    gc-m, gi-s, gc-w), the monotonic pair (gs-max, gc-min), and the
+    bounded-recompute pair (ga-s attention-SAGE, gp-m PNA-GraphConv)."""
     name = name.lower()
     family, agg = _WORKLOAD_TABLE[name]
     dims = (d_in,) + (d_hidden,) * (n_layers - 1) + (n_classes,)
@@ -149,4 +163,6 @@ def make_workload(name: str, n_layers: int = 2, d_in: int = 32,
 
 WORKLOAD_NAMES = tuple(_WORKLOAD_TABLE)
 MONOTONIC_WORKLOAD_NAMES = tuple(n for n, (_, a) in _WORKLOAD_TABLE.items()
-                                 if not get_aggregator(a).invertible)
+                                 if get_aggregator(a).algebra == "monotonic")
+BOUNDED_WORKLOAD_NAMES = tuple(n for n, (_, a) in _WORKLOAD_TABLE.items()
+                               if get_aggregator(a).algebra == "bounded")

@@ -54,7 +54,8 @@ def make_stream(graph: DynamicGraph, holdout: tuple[np.ndarray, np.ndarray, np.n
                 n_updates: int, d_feat: int, seed: int = 0,
                 feature_scale: float = 1.0,
                 mix: tuple[float, float, float] = (1.0, 1.0, 1.0),
-                skew: float = 0.0) -> UpdateStream:
+                skew: float = 0.0,
+                feature_target: str = "rank") -> UpdateStream:
     """Interleaved stream of edge adds / edge deletes / feature updates.
 
     ``mix`` gives the relative weights of (additions, deletions, feature
@@ -64,6 +65,15 @@ def make_stream(graph: DynamicGraph, holdout: tuple[np.ndarray, np.ndarray, np.n
     and feature updates on hot vertices with probability ~ rank^-skew
     (deletions by their destination's hotness), mimicking the head-heavy
     update locality of social graphs instead of the paper's uniform pick.
+
+    ``feature_target`` picks what "hot" means for feature updates when
+    ``skew > 0``: ``"rank"`` (default) uses vertex id as rank like
+    ``powerlaw_graph``; ``"in_degree"`` draws feature targets with
+    probability ~ (in_degree+1)^skew on the *current* graph, which slams
+    feature churn into exactly the high-fan-in rows whose cached bounded
+    aggregates (softmax normalizers, top-k thresholds, PNA moments) are
+    most expensive to refresh — the adversarial workload for the
+    bounded-recompute family.
 
     Feature updates absorb any shortfall when the holdout/snapshot supply
     caps the edge kinds (the paper-protocol behavior) — unless the feature
@@ -79,11 +89,21 @@ def make_stream(graph: DynamicGraph, holdout: tuple[np.ndarray, np.ndarray, np.n
     w = w / w.sum()
     updates: list = []
 
+    if feature_target not in ("rank", "in_degree"):
+        raise ValueError(
+            f"feature_target must be 'rank' or 'in_degree': {feature_target!r}")
+
     # hot-vertex distribution (vertex id = rank, like powerlaw_graph)
     p_hot = None
+    p_feat = None
     if skew > 0:
         p_hot = np.arange(1, graph.n + 1, dtype=np.float64) ** (-skew)
         p_hot /= p_hot.sum()
+        if feature_target == "in_degree":
+            p_feat = (graph.in_degree.astype(np.float64) + 1.0) ** skew
+            p_feat /= p_feat.sum()
+        else:
+            p_feat = p_hot
 
     # targets honor the ratios exactly; rounding overshoot trims deletions
     n_add_t = int(round(n_updates * w[0]))
@@ -110,7 +130,7 @@ def make_stream(graph: DynamicGraph, holdout: tuple[np.ndarray, np.ndarray, np.n
     # edge kinds (the paper-protocol behavior) — but never when the caller
     # explicitly zeroed the feature weight
     n_feat = max(n_updates - n_add - n_del, 0) if w[2] > 0 else 0
-    vs = rng.choice(graph.n, size=n_feat, p=p_hot)
+    vs = rng.choice(graph.n, size=n_feat, p=p_feat)
     for v in vs:
         updates.append(FeatureUpdate(int(v),
                                      rng.normal(0, feature_scale, size=d_feat).astype(np.float32)))

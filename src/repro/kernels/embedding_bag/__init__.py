@@ -1,1 +1,2 @@
+from .kernel import embedding_bag_pallas  # noqa: F401
 from .ops import embedding_bag_kernel  # noqa: F401

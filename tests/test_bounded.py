@@ -1,0 +1,357 @@
+"""The bounded-recompute algebra family: attention (ga-s), PNA (gp-m), and
+top-k workloads stay oracle-exact at tolerance=0 on every engine; in
+approximate mode (tolerance>0) every published embedding's error against
+the full oracle stays under the certified per-vertex bound; the cached
+partial aggregates (softmax normalizers + anchors, top-k thresholds, PNA
+moments) survive checkpoint/restore, journal replay, and engine hot-swap;
+and RIPPLE's patch/refresh classification re-aggregates strictly fewer rows
+than RC's unconditional re-aggregation.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import InferenceSession, SessionConfig
+from repro.core import (BOUNDED_WORKLOAD_NAMES, DynamicGraph, InferenceState,
+                        RippleEngine, UpdateBatch, erdos_renyi,
+                        full_inference, params_to_numpy)
+from repro.core.graph import EdgeUpdate, FeatureUpdate
+from repro.core.workloads import Workload, WorkloadSpec
+
+ATOL = 2e-3
+RTOL = 2e-3
+
+BOUNDED = list(BOUNDED_WORKLOAD_NAMES)  # ga-s (attention), gp-m (PNA)
+
+
+def _build(name, engine, n=40, m=170, seed=0, **over):
+    cfg = dict(workload=name, engine=engine, graph="er", n=n, m=m,
+               d_in=8, d_hidden=12, n_classes=5, seed=seed)
+    cfg.update(over)
+    return InferenceSession.build(SessionConfig(**cfg))
+
+
+def _oracle_H(session):
+    st = session.sync()
+    H, _ = full_inference(session.workload, session.params,
+                          jax.numpy.asarray(st.H[0]), *session.graph.coo(),
+                          session.graph.in_degree)
+    return [np.asarray(h) for h in H]
+
+
+def _assert_exact(session, label=""):
+    H_ref = _oracle_H(session)
+    for l, (h, href) in enumerate(zip(session.state.H, H_ref)):
+        np.testing.assert_allclose(h, href, atol=ATOL, rtol=RTOL,
+                                   err_msg=f"{label} layer {l}")
+
+
+def _random_batch(rng, session, k=5):
+    g = session.graph
+    batch = UpdateBatch()
+    for _ in range(k):
+        kind = rng.integers(0, 3)
+        if kind == 0:
+            u, v = rng.integers(0, g.n, size=2)
+            if u != v:
+                batch.edges.append(EdgeUpdate(int(u), int(v), True,
+                                              float(rng.uniform(0.1, 1.0))))
+        elif kind == 1:
+            src, dst, _ = g.coo()
+            if src.size:
+                i = rng.integers(0, src.size)
+                batch.edges.append(EdgeUpdate(int(src[i]), int(dst[i]), False))
+        else:
+            batch.features.append(FeatureUpdate(
+                int(rng.integers(0, g.n)),
+                rng.normal(size=8).astype(np.float32)))
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# tolerance=0 exactness: every engine vs the oracle under random streams
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", BOUNDED)
+@pytest.mark.parametrize("engine", ["ripple", "rc", "device", "full"])
+def test_bounded_random_stream_matches_oracle(name, engine):
+    s = _build(name, engine)
+    rng = np.random.default_rng(13)
+    for step in range(5):
+        s.ingest(_random_batch(rng, s))
+        _assert_exact(s, f"{name}/{engine} step {step}")
+
+
+@pytest.mark.parametrize("name", BOUNDED)
+def test_bounded_vertexwise_query(name):
+    s = _build(name, "vertexwise")
+    s.ingest(s.make_stream(12, seed=1), batch_size=4)
+    H_ref = _oracle_H(s)
+    targets = np.arange(10)
+    np.testing.assert_allclose(s.query(targets), H_ref[-1][targets],
+                               atol=ATOL, rtol=RTOL)
+
+
+@pytest.mark.parametrize("name", BOUNDED)
+def test_bounded_dist_fallback_is_declared_and_exact(name):
+    """No mesh propagation path for the bounded family yet: the dist
+    adapter must *declare* the host-RC fallback (never silently shard) and
+    stay exact through a mixed stream."""
+    s = _build(name, "dist")
+    assert s.engine.bounded_fallback
+    assert s.engine.ckpt_shards == 1
+    s.ingest(s.make_stream(18, seed=2), batch_size=6)
+    _assert_exact(s, f"{name}/dist-fallback")
+    np.testing.assert_allclose(s.query(np.arange(8)), _oracle_H(s)[-1][:8],
+                               atol=ATOL, rtol=RTOL)
+
+
+# ---------------------------------------------------------------------------
+# adversarial cache invalidation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ["ripple", "device"])
+def test_delete_the_dominant_logit(engine):
+    """Attention's worst case: make one in-neighbor's logit dominate a
+    row's softmax (normalizer z concentrates on it), then delete exactly
+    that edge — the stale (anchor, z) cache must be detected as
+    non-patchable and the row refreshed, not left with a collapsed
+    normalizer."""
+    s = _build("ga-s", engine)
+    rng = np.random.default_rng(5)
+    for round_ in range(4):
+        st = s.sync()
+        degs = s.graph.in_degree
+        rows = np.nonzero(degs >= 3)[0]
+        v = int(rows[rng.integers(0, rows.size)])
+        nbrs, _ = s.graph.in_nbrs(v)
+        # boost u's features so its logit (sum/sqrt(d)) dominates v's row
+        u = int(nbrs[np.argmax(st.H[0][nbrs].sum(axis=1))])
+        boost = np.full(8, 6.0, dtype=np.float32)
+        s.ingest(UpdateBatch(features=[FeatureUpdate(u, boost)]))
+        _assert_exact(s, f"round {round_} boost")
+        # now delete the dominant-logit edge
+        s.ingest(UpdateBatch(edges=[EdgeUpdate(u, v, False)]))
+        _assert_exact(s, f"round {round_} delete-dominant")
+
+
+def _topk_workload():
+    """Top-k has no named session workload yet; exercise its threshold
+    cache at the engine level with a hand-built spec."""
+    spec = WorkloadSpec(name="gc-topk", aggregator="topk",
+                        self_dependent=False, n_layers=2, dims=(6, 10, 4))
+    return Workload(spec=spec, family="gc")
+
+
+def test_topk_threshold_crossing():
+    """Top-k's cache is the k-th-value threshold theta: an update that
+    crosses theta (up or down) invalidates the row and must refresh it;
+    updates strictly below theta are PATCH no-ops — and both paths must
+    stay oracle-exact."""
+    wl = _topk_workload()
+    n = 30
+    src, dst, w = erdos_renyi(n, 170, seed=3, weighted=False)
+    g = DynamicGraph(n, src, dst, w)
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(n, 6)).astype(np.float32)
+    params = wl.init_params(jax.random.PRNGKey(3))
+    state = InferenceState.bootstrap(wl, params, x, g)
+    eng = RippleEngine(wl, params_to_numpy(params), g, state)
+
+    def oracle():
+        H, _ = full_inference(wl, params, jax.numpy.asarray(state.H[0]),
+                              *g.coo(), g.in_degree)
+        return [np.asarray(h) for h in H]
+
+    def check(label):
+        for l, (h, href) in enumerate(zip(state.H, oracle())):
+            np.testing.assert_allclose(h, href, atol=ATOL, rtol=RTOL,
+                                       err_msg=f"{label} layer {l}")
+
+    # a hub with enough in-neighbors that theta is finite (k=3 < in-degree)
+    v = int(np.argmax(g.in_degree))
+    assert g.in_degree[v] >= 5
+    nbrs, _ = g.in_nbrs(v)
+    u = int(nbrs[0])
+
+    # cross UP: push u above theta in every dim -> REFRESH
+    hi = np.full(6, 50.0, dtype=np.float32)
+    stats = eng.apply_batch(UpdateBatch(features=[FeatureUpdate(u, hi)]))
+    assert stats.rows_reaggregated > 0
+    check("cross-up")
+
+    # cross DOWN: u was a top-k contributor everywhere, drop it -> REFRESH
+    lo = np.full(6, -100.0, dtype=np.float32)
+    stats = eng.apply_batch(UpdateBatch(features=[FeatureUpdate(u, lo)]))
+    assert stats.rows_reaggregated > 0
+    check("cross-down")
+
+    # below-threshold wiggle: u stays under theta in every dim -> the
+    # filtered-propagation win (PATCH is a no-op, frontier stops)
+    stats = eng.apply_batch(UpdateBatch(
+        features=[FeatureUpdate(u, np.full(6, -120.0, dtype=np.float32))]))
+    assert stats.patch_events > 0
+    check("below-threshold")
+
+
+def test_stream_feature_target_in_degree():
+    """The adversarial stream knob: feature_target='in_degree' concentrates
+    feature churn on high-fan-in rows (the expensive cached rows), and the
+    bounded engines stay exact under it."""
+    s = _build("ga-s", "ripple", graph="powerlaw", n=60, m=260)
+    hot = s.make_stream(150, seed=3, mix=(0, 0, 1), skew=1.5,
+                        feature_target="in_degree")
+    uni = s.make_stream(150, seed=3, mix=(0, 0, 1), skew=0.0)
+    deg = s.graph.in_degree
+
+    def mean_target_deg(stream):
+        ids = [u.vertex for u in stream if isinstance(u, FeatureUpdate)]
+        return float(deg[np.asarray(ids)].mean())
+
+    assert mean_target_deg(hot) > 1.5 * mean_target_deg(uni)
+    s.ingest(list(hot)[:40], batch_size=8)
+    _assert_exact(s, "in-degree-targeted stream")
+    with pytest.raises(ValueError, match="feature_target"):
+        s.make_stream(10, feature_target="bogus")
+
+
+# ---------------------------------------------------------------------------
+# approximate mode: certified bounds
+# ---------------------------------------------------------------------------
+def test_tolerance_rejected_for_non_bounded():
+    with pytest.raises(ValueError, match="bounded"):
+        _build("gc-s", "ripple", engine_options={"tolerance": 0.1})
+    with pytest.raises(ValueError, match="bounded"):
+        _build("gs-max", "device", engine_options={"tolerance": 0.1})
+
+
+@pytest.mark.parametrize("name", BOUNDED)
+@pytest.mark.parametrize("engine", ["ripple", "device"])
+@pytest.mark.parametrize("tol", [1e-3, 1e-1])
+def test_certified_bound_covers_published_error(name, engine, tol):
+    """At tolerance>0 the engine may serve stale embeddings, but every
+    published row's error vs the full oracle must stay under the certified
+    per-vertex bound (which itself must respect the tolerance)."""
+    s = _build(name, engine, n=50, m=220,
+               engine_options={"tolerance": tol})
+    stream = list(s.make_stream(36, seed=6, mix=(1, 1, 2), skew=1.2,
+                                feature_target="in_degree"))
+    for i in range(0, len(stream), 6):
+        s.ingest(stream[i:i + 6])
+        bound = s.engine.error_bound()
+        assert bound.shape == (s.graph.n,)
+        assert float(bound.max()) <= tol + 1e-6
+        H_ref = _oracle_H(s)
+        err = np.abs(s.state.H[-1] - H_ref[-1]).max(axis=1)
+        assert np.all(err <= bound + ATOL), \
+            f"published error {err.max():.3e} exceeds certified bound " \
+            f"{bound.max():.3e} at tolerance {tol}"
+
+
+def test_tolerance_actually_defers():
+    """The approximate mode must not be vacuous: small feature nudges
+    (sensor jitter, the paper's feature-churn regime) produce interior
+    changes under the deferral budget — the approximate engine skips those
+    writes and its certified bound goes positive, while the exact engine
+    commits everything and never defers."""
+    s_exact = _build("ga-s", "ripple", n=50, m=220)
+    s_apx = _build("ga-s", "ripple", n=50, m=220,
+                   engine_options={"tolerance": 1e-1})
+    rng = np.random.default_rng(8)
+    deferred_apx = deferred_exact = 0
+    for _ in range(6):
+        vs = rng.choice(50, size=4, replace=False)
+        batch = UpdateBatch(features=[
+            FeatureUpdate(int(v), s_exact.state.H[0][int(v)]
+                          + rng.normal(0, 1e-6, size=8).astype(np.float32))
+            for v in vs])
+        deferred_exact += s_exact.apply_one(batch).deferred_rows
+        deferred_apx += s_apx.apply_one(batch).deferred_rows
+    assert deferred_exact == 0
+    assert deferred_apx > 0
+    assert float(s_exact.engine.error_bound().max()) == 0.0
+    assert float(s_apx.engine.error_bound().max()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# the work claim: RIPPLE's patch/refresh beats RC's re-aggregation
+# ---------------------------------------------------------------------------
+def test_ripple_refreshes_fewer_rows_than_rc():
+    """RC re-aggregates every affected row every hop; RIPPLE only the rows
+    whose cache an update actually invalidates.  On ga-s with a mixed
+    stream the refresh-row total must be strictly below RC's."""
+    totals = {}
+    for engine in ("ripple", "rc"):
+        s = _build("ga-s", engine, n=60, m=260, graph="powerlaw")
+        rep = s.ingest(s.make_stream(60, seed=9, mix=(1, 1, 2), skew=1.0),
+                       batch_size=6)
+        totals[engine] = sum(r.rows_reaggregated for r in rep.results)
+        _assert_exact(s, engine)
+    assert totals["ripple"] < totals["rc"], totals
+
+
+# ---------------------------------------------------------------------------
+# cached aux state through swap / checkpoint / replay
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", BOUNDED)
+def test_swap_engine_roundtrips_bounded_state(name):
+    """ripple -> device -> ripple mid-stream: the cached (anchor, z,
+    theta, moments) state migrates through DeviceState and back without
+    breaking exactness."""
+    s = _build(name, "ripple")
+    updates = list(s.make_stream(24, seed=1))
+    s.ingest(updates[:8], batch_size=4)
+    s.swap_engine("device")
+    assert s.state.A is not None and s.state.eps is not None
+    s.ingest(updates[8:16], batch_size=4)
+    s.swap_engine("ripple")
+    s.ingest(updates[16:], batch_size=4)
+    _assert_exact(s, f"{name} swap round-trip")
+
+
+def test_checkpoint_restore_roundtrips_bounded_aux(tmp_path):
+    """The snapshot tree carries the aux cache + staleness high-water; a
+    restore brings back bit-identical aux arrays and keeps serving
+    exactly."""
+    s = _build("ga-s", "ripple", ckpt_dir=str(tmp_path), ckpt_every=10_000)
+    updates = list(s.make_stream(30, seed=1))
+    s.ingest(updates[:15], batch_size=5)
+    s.checkpoint()
+    aux_at_ckpt = [{nm: a.copy() for nm, a in layer.items()}
+                   for layer in s.state.A]
+    eps_at_ckpt = s.state.eps.copy()
+    s.ingest(updates[15:], batch_size=5)
+    assert s.restore() >= 0
+    assert s.state.A is not None
+    for layer, ref in zip(s.state.A, aux_at_ckpt):
+        assert set(layer) == set(ref)
+        for nm in layer:
+            np.testing.assert_array_equal(layer[nm], ref[nm])
+    np.testing.assert_array_equal(s.state.eps, eps_at_ckpt)
+    s.ingest(updates[15:], batch_size=5)
+    _assert_exact(s, "post-restore serving")
+
+
+@pytest.mark.parametrize("engine", ["ripple", "device"])
+def test_restore_then_replay_rebuilds_cache(tmp_path, engine):
+    """Crash recovery: snapshot + journal replay must land the cached
+    aggregates on a state consistent with the journal — continuing to
+    serve after replay stays oracle-exact."""
+    s = _build("gp-m", engine, ckpt_dir=str(tmp_path / engine),
+               ckpt_every=10_000)
+    updates = list(s.make_stream(30, seed=2))
+    s.ingest(updates[:12], batch_size=4)
+    s.checkpoint()
+    s.ingest(updates[12:24], batch_size=4)
+    tip_step = s.step
+    H_tip = [h.copy() for h in s.sync().H]
+
+    s.restore(replay=True)
+    assert s.step == tip_step
+    # host replay is bit-deterministic; the rebuilt device engine's buffer
+    # capacities (hence reduction orders) may differ -> float tolerance
+    tol = 1e-6 if engine == "ripple" else ATOL
+    for h, href in zip(s.sync().H, H_tip):
+        np.testing.assert_allclose(h, href, atol=tol, rtol=tol)
+    # the replayed cache keeps working for fresh updates
+    s.ingest(updates[24:], batch_size=4)
+    _assert_exact(s, f"{engine} post-replay")

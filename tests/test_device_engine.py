@@ -190,10 +190,11 @@ def test_donated_path_matches_fresh_nondonated(name):
 
 
 @pytest.mark.parametrize("name", ["gc-s", "gc-m", "gs-s", "gi-s", "gc-min",
-                                  "gs-max"])
+                                  "gs-max", "ga-s", "gp-m"])
 def test_pallas_hop_apply_matches_jnp(name):
     """The fused Pallas hop-apply (interpret mode off-TPU) must match the
-    jnp oracle path for both algebra families."""
+    jnp oracle path for all three algebra families (gp-m routes its
+    feature gather through the EmbeddingBag kernel)."""
     wl, g, params, state = _setup(name)
     wl2, g2, params2, state2 = _setup(name)
     pal = DeviceEngine(wl, params, g, state, min_bucket=16, use_pallas=True)

@@ -124,9 +124,10 @@ def test_ripple_equals_recompute(name):
     # RIPPLE must do no more aggregation work than RC (the k vs 2k' claim
     # holds on average; on tiny graphs allow equality-ish)
     assert s1.final_affected is not None and s2.final_affected is not None
-    if wl.spec.monotonic:
-        # filtered propagation: RIPPLE's frontier drops value-unchanged
-        # rows, so it touches a subset of RC's unfiltered expansion
+    if not wl.agg.invertible:
+        # filtered propagation (monotonic + bounded): RIPPLE's frontier
+        # drops value-unchanged rows, so it touches a subset of RC's
+        # unfiltered expansion
         assert set(s1.final_affected.tolist()) <= set(s2.final_affected.tolist())
     else:
         np.testing.assert_array_equal(np.sort(s1.final_affected),

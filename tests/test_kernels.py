@@ -138,6 +138,25 @@ def test_embedding_bag(V, B, hot, d, dtype):
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("V,R,hot,d", [(64, 16, 8, 16), (200, 48, 12, 32)])
+def test_embedding_bag_engine_pattern(V, R, hot, d):
+    """The bounded device engine's gather shape: a [R, hot] in-neighbor id
+    rectangle padded with sentinel V pointing at a zero row appended to the
+    table — the kernel's bag sum must equal the masked dense sum (this is
+    gp-m's per-row first-moment gather under ``use_pallas``)."""
+    from repro.kernels.embedding_bag import embedding_bag_pallas
+    table = jnp.asarray(RNG.normal(size=(V, d)), jnp.float32)
+    padded = jnp.concatenate([table, jnp.zeros((1, d), jnp.float32)])
+    degs = RNG.integers(0, hot + 1, size=R)
+    idx = np.full((R, hot), V, dtype=np.int32)
+    for r, deg in enumerate(degs):
+        idx[r, :deg] = RNG.integers(0, V, size=deg)
+    out = embedding_bag_pallas(jnp.asarray(idx), padded, interpret=True)
+    mask = (idx < V)[..., None]
+    ref = (np.asarray(table)[np.minimum(idx, V - 1)] * mask).sum(axis=1)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5, rtol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("B,S,H,Hkv,Dh,bq,bkv",
                          [(2, 64, 4, 2, 16, 16, 16),

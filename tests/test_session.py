@@ -71,7 +71,11 @@ def test_registry_declares_dist_options():
     assert {"mesh", "mode", "data_axes"} <= set(engine_options("dist"))
     assert engine_options("dist")["mode"].default == "ripple"
     assert "mode" not in engine_options("dist-rc")  # pinned to rc
-    assert engine_options("ripple") == {}
+    # ripple declares exactly the bounded-family tolerance knob (0 = exact)
+    assert set(engine_options("ripple")) == {"tolerance"}
+    assert engine_options("ripple")["tolerance"].default == 0.0
+    assert "tolerance" in engine_options("device")
+    assert "tolerance" not in engine_options("rc")
 
 
 # -- session round-trip == oracle, all five workloads -----------------------
